@@ -1,0 +1,26 @@
+"""Paper Sec II-C: image-size comparison.
+
+Paper: solo5 ~200 kB < IncludeOS ~2.5 MB < Alpine ~6 MB < Firecracker ~70 MB.
+Ours, per deployed function: serialized AOT program ("kernel image") vs pre-laid
+weight snapshot ("rootfs") vs generic fp32 checkpoint (the fat comparison path),
+plus deploy (build) time — the paper's 3.5 s IncludeOS build vs 9-10 s Docker build.
+"""
+from pathlib import Path
+
+from benchmarks.common import bench_spec, emit
+
+
+def run(gw, archs=("llama3.2-3b", "olmo-1b", "qwen2-vl-2b")) -> None:
+    for arch in archs:
+        spec = bench_spec(arch=arch)
+        if spec.name not in gw.deployments:
+            gw.deploy(spec)
+        dep = gw.deployments[spec.name]
+        m = dep.image.manifest
+        generic = Path(dep.generic_ckpt).stat().st_size
+        emit(f"images/{arch}/program_kB", m.program_bytes / 1e3,
+             f"build_s={m.build_seconds:.1f}")
+        emit(f"images/{arch}/snapshot_MB", m.snapshot_bytes / 1e6,
+             f"params={m.param_count/1e6:.1f}M")
+        emit(f"images/{arch}/generic_ckpt_MB", generic / 1e6,
+             f"bloat_x={generic/max(m.snapshot_bytes,1):.2f}")

@@ -1,0 +1,37 @@
+"""Shared benchmark scaffolding: one Gateway, tiny deployed functions, CSV rows."""
+import os
+
+os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "3")
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import concurrent.futures  # noqa: E402
+import dataclasses  # noqa: E402
+import time  # noqa: E402
+from typing import Callable, List, Optional  # noqa: E402
+
+import numpy as np  # noqa: E402
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def parallel_invokes(fn: Callable, n_requests: int, concurrency: int) -> List:
+    with concurrent.futures.ThreadPoolExecutor(concurrency) as pool:
+        futs = [pool.submit(fn) for _ in range(n_requests)]
+        return [f.result() for f in futs]
+
+
+def bench_spec(arch: str = "llama3.2-3b", batch: int = 2, prompt: int = 32,
+               decode: int = 4):
+    from repro.core import FunctionSpec
+    return FunctionSpec(arch=arch, batch_size=batch, prompt_len=prompt,
+                        decode_steps=decode)

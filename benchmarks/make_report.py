@@ -1,0 +1,104 @@
+"""Populate EXPERIMENTS.md tables from the dry-run artifacts."""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from benchmarks.roofline import improvement_note, load_records, terms  # noqa: E402
+
+ROOT = Path(__file__).resolve().parent.parent
+ART = ROOT / "artifacts" / "dryrun"
+
+ARCH_ORDER = ["starcoder2-3b", "llama3.2-3b", "olmo-1b", "qwen2.5-32b",
+              "whisper-medium", "kimi-k2-1t-a32b", "arctic-480b", "xlstm-1.3b",
+              "jamba-1.5-large-398b", "qwen2-vl-2b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _key(r):
+    return (ARCH_ORDER.index(r["arch"]), SHAPE_ORDER.index(r["shape"]))
+
+
+def dryrun_table() -> str:
+    rows = ["| arch | shape | mesh | rules | opt | ga | lower+compile s | "
+            "HBM GB/dev | HLO lines | collectives |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    recs = sorted((r for r in load_records(mesh_filter=None, variant="baseline")),
+                  key=lambda r: (_key(r), r["mesh"]))
+    for r in recs:
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['rules']} "
+            f"| {r['opt_dtype']} | {r['grad_accum']} "
+            f"| {r['lower_s']:.0f}+{r['compile_s']:.0f} "
+            f"| {r['bytes_per_device']/2**30:.1f} | {r['hlo_lines']} "
+            f"| {r['collectives']['count']} ops |")
+    # skipped cells
+    from repro.configs import get_config, list_archs
+    rows.append("")
+    rows.append("Assignment-skipped cells (recorded, not run):")
+    rows.append("")
+    rows.append("| arch | shape | reason |")
+    rows.append("|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape, why in get_config(arch).skipped_shapes().items():
+            rows.append(f"| {arch} | {shape} | {why} |")
+    return "\n".join(rows)
+
+
+def roofline_table() -> str:
+    rows = ["| arch | shape | compute_s | memory_s | coll_s | bound | "
+            "roofline frac | 6ND/HLO | note |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    recs = sorted(load_records(variant="baseline"), key=_key)
+    for r in recs:
+        t = terms(r)
+        if t is None:
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3f} "
+            f"| {t['memory_s']:.3f} | {t['collective_s']:.3f} | {t['dominant']} "
+            f"| {t['roofline_fraction']:.4f} | {t['model_hlo_ratio']:.2f} "
+            f"| {improvement_note(r, t)} |")
+    return "\n".join(rows)
+
+
+def variants_table() -> str:
+    recs = [r for r in load_records(variant=None) if r["variant"] != "baseline"]
+    if not recs:
+        return "(no variants yet)"
+    rows = ["| arch | shape | variant | compute_s | memory_s | coll_s | bound | frac |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=_key):
+        t = terms(r)
+        if t is None:
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['variant']} | {t['compute_s']:.3f} "
+            f"| {t['memory_s']:.3f} | {t['collective_s']:.3f} | {t['dominant']} "
+            f"| {t['roofline_fraction']:.4f} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    md = (ROOT / "EXPERIMENTS.md").read_text()
+    md = _replace(md, "DRYRUN_TABLE", dryrun_table())
+    md = _replace(md, "ROOFLINE_TABLE", roofline_table())
+    md = _replace(md, "VARIANTS_TABLE", variants_table())
+    (ROOT / "EXPERIMENTS.md").write_text(md)
+    print("EXPERIMENTS.md tables updated")
+    print(variants_table())
+
+
+def _replace(md: str, tag: str, content: str) -> str:
+    marker = f"<!-- {tag} -->"
+    block = f"{marker}\n{content}\n<!-- /{tag} -->"
+    if f"<!-- /{tag} -->" in md:
+        import re
+        return re.sub(rf"<!-- {tag} -->.*?<!-- /{tag} -->", block, md, flags=re.S)
+    return md.replace(marker, block)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Roofline analysis over the dry-run artifacts (one row per arch x shape x mesh).
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Per cell, from the dry-run JSON (probe-extrapolated per-device costs — see
+launch/costmodel.py for why raw cost_analysis undercounts scanned programs):
+
+  compute_s    = flops_per_device   / 197e12
+  memory_s     = bytes_per_device   / 819e9
+  collective_s = coll_bytes_per_dev / 50e9
+
+dominant term = the bottleneck; roofline_fraction = useful-model-FLOPs time /
+dominant term (an MFU upper bound); model/HLO ratio flags remat & dispatch waste.
+"""
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+ART_DIR = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def load_records(art_dir: Path = ART_DIR, mesh_filter: str = "data16xmodel16",
+                 variant: Optional[str] = None) -> List[Dict]:
+    recs = []
+    for p in sorted(art_dir.glob("*.json")):
+        r = json.loads(p.read_text())
+        if mesh_filter and r.get("mesh") != mesh_filter:
+            continue
+        if variant and r.get("variant") != variant:
+            continue
+        recs.append(r)
+    return recs
+
+
+def terms(rec: Dict) -> Optional[Dict]:
+    costs = rec.get("costs_per_device")
+    if not costs:
+        return None
+    compute_s = costs["flops"] / PEAK_FLOPS
+    memory_s = costs["bytes"] / HBM_BW
+    coll_s = costs["collectives"]["coll_total"] / LINK_BW
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", coll_s), key=lambda kv: kv[1])
+    model_flops_pd = rec["model_flops_global"] / rec["n_devices"]
+    model_time = model_flops_pd / PEAK_FLOPS
+    frac = model_time / dominant[1] if dominant[1] > 0 else float("nan")
+    hlo_ratio = rec["model_flops_global"] / max(
+        costs["flops"] * rec["n_devices"], 1e-9)
+    return {
+        "compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s,
+        "dominant": dominant[0], "dominant_s": dominant[1],
+        "roofline_fraction": frac, "model_hlo_ratio": hlo_ratio,
+        "bytes_per_device_GB": rec["bytes_per_device"] / 2**30,
+    }
+
+
+def improvement_note(rec: Dict, t: Dict) -> str:
+    dom = t["dominant"]
+    kind = rec["shape"]
+    if dom == "memory":
+        if "train" in kind:
+            return ("cut HBM traffic: larger microbatch amortizes weight "
+                    "all-gathers; 'dots' remat keeps matmul outputs")
+        return "decode/prefill is bandwidth-bound: shrink cache dtype or shard KV wider"
+    if dom == "collective":
+        coll = rec["costs_per_device"]["collectives"]
+        top = max((k for k in coll if k != "coll_total"), key=lambda k: coll[k])
+        return f"dominant collective is {top}: reshard to eliminate or overlap it"
+    return "compute-bound: raise MFU via larger tiles / fewer recomputes"
+
+
+def table(recs: List[Dict]) -> str:
+    hdr = ("| arch | shape | rules | compute_s | memory_s | coll_s | bound | "
+           "roofline_frac | 6ND/HLO | HBM GB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for r in recs:
+        t = terms(r)
+        if t is None:
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['rules']} | {t['compute_s']:.3f} "
+            f"| {t['memory_s']:.3f} | {t['collective_s']:.3f} | {t['dominant']} "
+            f"| {t['roofline_fraction']:.3f} | {t['model_hlo_ratio']:.2f} "
+            f"| {t['bytes_per_device_GB']:.1f} |")
+    return hdr + "\n".join(rows) + "\n"
+
+
+def run(emit=None) -> None:
+    recs = load_records(variant="baseline")
+    if emit is None:
+        print(table(recs))
+        return
+    for r in recs:
+        t = terms(r)
+        if t is None:
+            continue
+        emit(f"roofline/{r['arch']}/{r['shape']}", t["dominant_s"] * 1e6,
+             f"bound={t['dominant']};frac={t['roofline_fraction']:.3f};"
+             f"mem_GB={t['bytes_per_device_GB']:.1f}")
+
+
+if __name__ == "__main__":
+    recs = load_records(variant=None if len(sys.argv) < 2 else None)
+    print(table(recs))
+    for r in recs:
+        t = terms(r)
+        if t:
+            print(f"{r['arch']:24s} {r['shape']:12s} -> {t['dominant']:10s} "
+                  f"note: {improvement_note(r, t)}")

@@ -1,0 +1,28 @@
+"""Architecture registry. Importing this package registers all assigned archs."""
+from repro.configs.base import (  # noqa: F401
+    ArchConfig,
+    MoEConfig,
+    SSMConfig,
+    ShapeSpec,
+    SHAPES,
+    TRAIN_4K,
+    PREFILL_32K,
+    DECODE_32K,
+    LONG_500K,
+    all_cells,
+    get_config,
+    list_archs,
+    register,
+)
+
+# one module per assigned architecture (import for registration side effect)
+from repro.configs import starcoder2_3b  # noqa: F401
+from repro.configs import llama3_2_3b  # noqa: F401
+from repro.configs import olmo_1b  # noqa: F401
+from repro.configs import qwen2_5_32b  # noqa: F401
+from repro.configs import whisper_medium  # noqa: F401
+from repro.configs import kimi_k2_1t_a32b  # noqa: F401
+from repro.configs import arctic_480b  # noqa: F401
+from repro.configs import xlstm_1_3b  # noqa: F401
+from repro.configs import jamba_1_5_large_398b  # noqa: F401
+from repro.configs import qwen2_vl_2b  # noqa: F401

@@ -1,0 +1,59 @@
+"""Agent: per-host executor lifecycle management (the Fn agent analogue).
+
+One request = select driver -> start executor -> run -> finish (exit / repool),
+with Timeline stamps at each boundary and exact residency accounting on exit.
+With cold drivers "the lifecycle management functionality of the agent becomes
+unnecessary" (paper Sec IV-A) — visible here as the trivial finish path.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core.cluster import Host
+from repro.core.deploy import Deployment
+from repro.core.executor import Executor
+from repro.core.metrics import Recorder, ResidencyTracker, Timeline, now
+
+
+class Agent:
+    def __init__(self, recorder: Recorder, residency: ResidencyTracker) -> None:
+        self.recorder = recorder
+        self.residency = residency
+
+    def handle(self, host: Host, dep: Deployment, tokens: Optional[np.ndarray],
+               driver_name: str, tl: Timeline, label: Optional[str] = None) -> Any:
+        tl.t_dispatch = now()
+        host.check_alive()
+
+        if driver_name == "noop":                       # gateway/dispatch floor probe
+            tl.t_start_begin = tl.t_exec_begin = now()
+            tl.t_done = now()
+            self.recorder.add(label or "noop", tl)
+            return None
+
+        driver = host.drivers[driver_name]
+        tl.t_start_begin = now()
+        ex = driver.start(dep, tl)
+        host.check_alive()
+        tl.t_exec_begin = now()
+        try:
+            out = ex.run(tokens)
+        except Exception:
+            # a crashed executor must never return to a pool — exit it so the
+            # dispatcher's retry instantiates a FRESH one (stateless executors
+            # make this always safe; see dispatcher._is_transient)
+            ex.exit()
+            self.residency.add_residency(ex.nbytes, ex.resident_seconds,
+                                         ex.busy_seconds)
+            raise
+        driver.finish(dep, ex)
+        if ex.params is None and ex.driver not in ("process",):
+            # exited now — account exact residency
+            self.residency.add_residency(ex.nbytes, ex.resident_seconds,
+                                         ex.busy_seconds)
+        host.check_alive()
+        tl.t_done = now()
+        self.recorder.add(label or f"{dep.name}:{driver_name}", tl)
+        return np.asarray(out)

@@ -1,0 +1,87 @@
+"""ExecutorImage — the unikernel analogue.
+
+An IncludeOS image is a single-purpose VM: exactly one application, its drivers, and
+nothing else, built ahead of time by ``boot`` at deploy time. Our analogue is a
+single-purpose executor artifact for exactly one (architecture x request-shape x mesh):
+
+* ``program``  — the serialized AOT-compiled XLA executable (repro.core.compile_cache),
+* ``snapshot`` — weights pre-laid-out for zero-transform loading (repro.core.snapshot),
+* ``manifest`` — identity, sizes and geometry, used by the dispatcher for placement
+  and by benchmarks/bench_images.py (the paper's Sec II-C image-size comparison).
+
+Nothing generic ships in the image: no tracing machinery, no dynamic shapes, no
+warm-pool bookkeeping. That specialization is what makes the cold path fast — the
+same bet IncludeOS makes by dropping the general-purpose OS.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import time
+from typing import Dict, Optional
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class FunctionSpec:
+    """What the user deploys: a model + fixed request geometry (the 'function')."""
+
+    arch: str                  # registered architecture name (or 'reduced:<name>')
+    batch_size: int
+    prompt_len: int
+    decode_steps: int = 4
+    reduced: bool = True       # benchmark deployments use reduced same-family configs
+    seed: int = 0
+
+    @property
+    def name(self) -> str:
+        return (f"{self.arch}@b{self.batch_size}s{self.prompt_len}"
+                f"d{self.decode_steps}{'r' if self.reduced else ''}")
+
+    def cache_key(self, jax_version: str = jax.__version__,
+                  backend: Optional[str] = None) -> str:
+        payload = json.dumps({
+            "spec": dataclasses.asdict(self),
+            "jax": jax_version,
+            "backend": backend or jax.default_backend(),
+        }, sort_keys=True)
+        return hashlib.sha256(payload.encode()).hexdigest()[:24]
+
+
+@dataclasses.dataclass
+class ImageManifest:
+    """Everything the platform needs to know about one ExecutorImage."""
+
+    key: str
+    function: str
+    program_bytes: int          # serialized executable size ("kernel image")
+    snapshot_bytes: int         # weight snapshot size ("rootfs")
+    param_count: int
+    built_at: float
+    build_seconds: float
+    extra: Dict = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=2)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ImageManifest":
+        return cls(**json.loads(s))
+
+
+@dataclasses.dataclass
+class ExecutorImage:
+    """Handle to a built image. Contents live in the cache/snapshot stores on disk."""
+
+    manifest: ImageManifest
+    spec: FunctionSpec
+
+    @property
+    def key(self) -> str:
+        return self.manifest.key
+
+    @property
+    def total_bytes(self) -> int:
+        return self.manifest.program_bytes + self.manifest.snapshot_bytes

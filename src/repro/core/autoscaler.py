@@ -1,0 +1,136 @@
+"""Autoscaling: the warm-pool machinery vs the cold-only trivial case.
+
+``WarmPoolAutoscaler`` is the complexity the paper wants to delete: a background
+control loop that, per function, tracks arrival rate and service time, computes a
+target pool size (Little's law + headroom), prewarms executors up to it, and expires
+idle ones past the idle-timeout — "a trade-off between wasting resources and
+experiencing frequent cold starts" (Sec IV).
+
+``ColdOnlyScaler`` is the paper's proposal: nothing. Scaling IS the request queue —
+every request starts its own executor which exits on completion. The class exists so
+both modes expose the same interface and the benchmark can report both.
+"""
+from __future__ import annotations
+
+import math
+import threading
+import time
+from typing import Dict, List, Optional
+
+from repro.core.cluster import Cluster
+from repro.core.deploy import Deployment
+from repro.core.drivers import WarmDriver
+from repro.core.metrics import now
+
+
+class ColdOnlyScaler:
+    """Load-driven by construction: no pools, no monitoring, no knobs."""
+
+    def __init__(self) -> None:
+        self.mode = "cold"
+
+    def observe_arrival(self, fn_name: str) -> None:
+        pass
+
+    def observe_service_time(self, fn_name: str, seconds: float) -> None:
+        pass
+
+    def start(self) -> None:
+        pass
+
+    def stop(self) -> None:
+        pass
+
+    def target(self, fn_name: str) -> int:
+        return 0
+
+    def resident_nbytes(self, cluster: Cluster) -> int:
+        return 0
+
+
+class WarmPoolAutoscaler:
+    """Per-function pool targets from observed load; prewarm + idle-expiry loop."""
+
+    def __init__(self, cluster: Cluster, deployments: Dict[str, Deployment], *,
+                 interval_s: float = 0.25, idle_timeout_s: float = 5.0,
+                 headroom: float = 1.5, max_pool: int = 8) -> None:
+        self.mode = "warm"
+        self.cluster = cluster
+        self.deployments = deployments
+        self.interval_s = interval_s
+        self.idle_timeout_s = idle_timeout_s
+        self.headroom = headroom
+        self.max_pool = max_pool
+        self._arrivals: Dict[str, List[float]] = {}
+        self._service: Dict[str, float] = {}
+        self._last_seen: Dict[str, float] = {}
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------ observations
+    def observe_arrival(self, fn_name: str) -> None:
+        t = now()
+        with self._lock:
+            buf = self._arrivals.setdefault(fn_name, [])
+            buf.append(t)
+            if len(buf) > 512:
+                del buf[: len(buf) - 512]
+            self._last_seen[fn_name] = t
+
+    def observe_service_time(self, fn_name: str, seconds: float) -> None:
+        with self._lock:
+            prev = self._service.get(fn_name, seconds)
+            self._service[fn_name] = 0.8 * prev + 0.2 * seconds     # EWMA
+
+    # ---------------------------------------------------------------- control
+    def target(self, fn_name: str) -> int:
+        """Little's law: concurrency = arrival_rate x service_time, with headroom."""
+        with self._lock:
+            buf = list(self._arrivals.get(fn_name, []))
+            svc = self._service.get(fn_name, 0.05)
+            last = self._last_seen.get(fn_name, 0.0)
+        if not buf or now() - last > self.idle_timeout_s:
+            return 0
+        horizon = 2.0
+        recent = [t for t in buf if t > now() - horizon]
+        rate = len(recent) / horizon
+        return min(self.max_pool, int(math.ceil(rate * svc * self.headroom)))
+
+    def _tick(self) -> None:
+        for name, dep in list(self.deployments.items()):
+            tgt = self.target(name)
+            for host in self.cluster.alive_hosts():
+                warm: WarmDriver = host.drivers["warm"]  # type: ignore[assignment]
+                have = warm.pool_size(dep.image.key)
+                per_host_target = max(0, int(math.ceil(tgt / max(len(self.cluster.alive_hosts()), 1))))
+                if have < per_host_target:
+                    try:
+                        warm.prewarm(dep, per_host_target - have)
+                    except Exception:
+                        pass
+                elif have > per_host_target:
+                    warm.expire_idle(dep.image.key, per_host_target)
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self.interval_s):
+            try:
+                self._tick()
+            except Exception:
+                pass
+
+    def start(self) -> None:
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=2.0)
+
+    def resident_nbytes(self, cluster: Cluster) -> int:
+        total = 0
+        for host in cluster.hosts:
+            warm: WarmDriver = host.drivers["warm"]  # type: ignore[assignment]
+            total += warm.resident_nbytes()
+        return total

@@ -1,0 +1,95 @@
+"""Virtual multi-host cluster: placement targets + failure injection.
+
+Each Host models one machine: a bounded slot pool (the paper's 24-core server that
+degrades past 20 parallel starts), its own driver instances (so warm pools and fork
+donors are per-host state, exactly like container pools are per-machine), and a
+liveness flag. ``kill()`` simulates node failure: in-flight work raises HostFailure
+at the next lifecycle boundary and the dispatcher re-routes — stateless cold-only
+executors make this loss-free, which is the paper's predictability argument.
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Callable, Dict, List, Optional
+
+from repro.core.drivers import make_drivers
+
+
+class HostFailure(RuntimeError):
+    pass
+
+
+class Host:
+    def __init__(self, host_id: int, n_slots: int = 4, on_exit=None) -> None:
+        self.host_id = host_id
+        self.n_slots = n_slots
+        self.alive = True
+        self.drivers = make_drivers(on_exit=on_exit)
+        self._pool = ThreadPoolExecutor(max_workers=n_slots,
+                                        thread_name_prefix=f"host{host_id}")
+        self._inflight = 0
+        self._lock = threading.Lock()
+
+    def submit(self, fn: Callable, *args) -> Future:
+        if not self.alive:
+            raise HostFailure(f"host {self.host_id} is dead")
+        with self._lock:
+            self._inflight += 1
+
+        def wrapped():
+            try:
+                return fn(*args)
+            finally:
+                with self._lock:
+                    self._inflight -= 1
+
+        return self._pool.submit(wrapped)
+
+    @property
+    def load(self) -> int:
+        with self._lock:
+            return self._inflight
+
+    def check_alive(self) -> None:
+        if not self.alive:
+            raise HostFailure(f"host {self.host_id} died")
+
+    def kill(self) -> None:
+        self.alive = False
+
+    def revive(self) -> None:
+        self.alive = True
+
+    def shutdown(self) -> None:
+        self._pool.shutdown(wait=False, cancel_futures=True)
+
+
+class Cluster:
+    def __init__(self, n_hosts: int = 1, slots_per_host: int = 4, on_exit=None) -> None:
+        self.hosts: List[Host] = [Host(i, slots_per_host, on_exit=on_exit)
+                                  for i in range(n_hosts)]
+        self._rr = 0
+        self._lock = threading.Lock()
+
+    def alive_hosts(self) -> List[Host]:
+        return [h for h in self.hosts if h.alive]
+
+    def pick_host(self, exclude: Optional[set] = None) -> Host:
+        """Least-loaded among alive hosts (round-robin tiebreak)."""
+        exclude = exclude or set()
+        alive = [h for h in self.alive_hosts() if h.host_id not in exclude]
+        if not alive:
+            alive = self.alive_hosts()
+        if not alive:
+            raise HostFailure("no alive hosts")
+        with self._lock:
+            self._rr += 1
+            return min(alive, key=lambda h: (h.load, (h.host_id + self._rr) % len(alive)))
+
+    def kill_host(self, host_id: int) -> None:
+        self.hosts[host_id].kill()
+
+    def shutdown(self) -> None:
+        for h in self.hosts:
+            h.shutdown()

@@ -1,0 +1,148 @@
+"""Dispatcher: routing, retry-on-host-failure, and hedged straggler mitigation.
+
+The cold-only simplification shows up here concretely: there is no warm-affinity
+table and no per-function load monitor — any alive host can take any request, so
+routing is just least-loaded. What remains is what any large fleet needs:
+
+* retry: HostFailure -> re-dispatch to another host (stateless executors make this
+  always-safe);
+* hedging: if an attempt exceeds ``hedge_factor`` x the observed p95 latency for
+  that (function, driver), launch a backup on a different host and take the first
+  result — the tail-at-scale twin of the paper's overload observation (Fig 1/2:
+  start latency blows up past the core count).
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.agent import Agent
+from repro.core.cluster import Cluster, HostFailure
+from repro.core.deploy import Deployment
+from repro.core.metrics import Timeline, now
+
+
+class _LatencyModel:
+    """Streaming per-(fn, driver) latency quantile estimate for hedge deadlines."""
+
+    def __init__(self, window: int = 256) -> None:
+        self._samples: Dict[str, List[float]] = {}
+        self._lock = threading.Lock()
+        self.window = window
+
+    def observe(self, key: str, seconds: float) -> None:
+        with self._lock:
+            buf = self._samples.setdefault(key, [])
+            buf.append(seconds)
+            if len(buf) > self.window:
+                del buf[: len(buf) - self.window]
+
+    def p95(self, key: str) -> Optional[float]:
+        with self._lock:
+            buf = self._samples.get(key)
+            if not buf or len(buf) < 8:
+                return None
+            return float(np.percentile(buf, 95))
+
+
+def _is_transient(err: BaseException) -> bool:
+    """Executor-crash faults worth re-dispatching (stateless executors make every
+    retry safe — the cold-only design's fault-tolerance dividend)."""
+    name = type(err).__name__
+    return name in ("JaxRuntimeError", "XlaRuntimeError") or (
+        isinstance(err, RuntimeError) and "not found" in str(err).lower())
+
+
+class Dispatcher:
+    def __init__(self, cluster: Cluster, agent: Agent, *,
+                 max_retries: int = 3, hedge_factor: float = 3.0,
+                 hedging: bool = True) -> None:
+        self.cluster = cluster
+        self.agent = agent
+        self.max_retries = max_retries
+        self.hedge_factor = hedge_factor
+        self.hedging = hedging
+        self.latency = _LatencyModel()
+        self.hedges_launched = 0
+        self.retries = 0
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------ public
+    def submit(self, dep: Optional[Deployment], tokens, driver_name: str,
+               label: Optional[str] = None) -> Future:
+        """Dispatch one request; returns a Future with the result."""
+        result: Future = Future()
+        tl = Timeline(t_enqueue=now())
+        self._attempt(result, dep, tokens, driver_name, tl, tried=set(), n_try=0,
+                      label=label, allow_hedge=self.hedging)
+        return result
+
+    # ---------------------------------------------------------------- internal
+    def _attempt(self, result: Future, dep, tokens, driver_name: str, tl: Timeline,
+                 tried: set, n_try: int, label, allow_hedge: bool) -> None:
+        key = f"{dep.name if dep else 'noop'}:{driver_name}"
+        try:
+            host = self.cluster.pick_host(exclude=tried)
+        except HostFailure as e:
+            if not result.done():
+                result.set_exception(e)
+            return
+        tried = tried | {host.host_id}
+
+        def work():
+            out = self.agent.handle(host, dep, tokens, driver_name, tl, label)
+            self.latency.observe(key, tl.e2e)
+            return out
+
+        fut = host.submit(work)
+
+        def on_done(f: Future) -> None:
+            if result.done():
+                return
+            err = f.exception()
+            if err is None:
+                if not result.done():
+                    try:
+                        result.set_result(f.result())
+                    except Exception:
+                        pass
+                return
+            retryable = isinstance(err, HostFailure) or _is_transient(err)
+            if retryable and n_try < self.max_retries:
+                with self._lock:
+                    self.retries += 1
+                fresh = Timeline(t_enqueue=tl.t_enqueue)
+                self._attempt(result, dep, tokens, driver_name, fresh, tried,
+                              n_try + 1, label, allow_hedge)
+            elif not result.done():
+                result.set_exception(err)
+
+        fut.add_done_callback(on_done)
+
+        # straggler hedging: one backup if this attempt exceeds hedged deadline
+        p95 = self.latency.p95(key)
+        if allow_hedge and p95 is not None and len(self.cluster.alive_hosts()) > 1:
+            deadline = self.hedge_factor * p95
+
+            def hedge_watch():
+                fut_done = fut.done()
+                if not fut_done:
+                    try:
+                        fut.result(timeout=deadline)
+                        return
+                    except HostFailure:
+                        return      # retry path handles it
+                    except Exception:
+                        pass        # timeout or other -> hedge
+                if result.done() or fut.done():
+                    return
+                with self._lock:
+                    self.hedges_launched += 1
+                fresh = Timeline(t_enqueue=tl.t_enqueue)
+                self._attempt(result, dep, tokens, driver_name, fresh, tried,
+                              n_try + 1, label, allow_hedge=False)
+
+            threading.Thread(target=hedge_watch, daemon=True).start()

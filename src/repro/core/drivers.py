@@ -1,0 +1,230 @@
+"""Executor instantiation strategies — the paper's runtime taxonomy, ported.
+
+Ordered fastest -> slowest start, with their Sec II/III analogues:
+
+| driver            | paper analogue                  | start path                          |
+|-------------------|---------------------------------|-------------------------------------|
+| process           | bare process (`/bin/date`)      | reuse the resident donor executor   |
+| fork              | fork()/clone(), solo5-spt       | alias donor weights (COW) + program |
+| unikernel         | IncludeOS-hvt  (the paper's bet)| AOT deserialize + snapshot mmap->dev|
+| paused            | Fn paused containers/Firecracker| cached program + host RAM -> device |
+| warm              | warm Lambda / warm Fn-Docker    | pool checkout (no work, holds HBM)  |
+| cold_jit_cached   | gVisor/runc                     | re-trace + XLA disk-cache hit + ckpt|
+| cold_jit          | full Docker stack               | re-trace + full XLA compile + ckpt  |
+
+Every driver returns a started Executor and fills Timeline.t_program/t_weights so the
+benchmarks can decompose startup exactly like the paper decomposes container layers.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.core.deploy import Deployment
+from repro.core.executor import Executor, tree_nbytes
+from repro.core.metrics import Timeline, now
+from repro.core.snapshot import load_generic_checkpoint
+
+
+class Driver:
+    name: str = "base"
+
+    def start(self, dep: Deployment, tl: Timeline) -> Executor:
+        raise NotImplementedError
+
+    def finish(self, dep: Deployment, ex: Executor) -> None:
+        """Post-request lifecycle. Cold drivers exit; pool drivers return."""
+        ex.exit()
+
+
+class UnikernelDriver(Driver):
+    """The paper's contribution: per-request cold start from a single-purpose image."""
+
+    name = "unikernel"
+
+    def start(self, dep: Deployment, tl: Timeline) -> Executor:
+        t0 = now()
+        program = dep.load_program()
+        tl.t_program = now() - t0
+        t1 = now()
+        params = dep.snapshots.load_to_device(dep.image.key)
+        params = jax.block_until_ready(params)
+        tl.t_weights = now() - t1
+        return Executor(dep.image.key, self.name, program, params)
+
+
+class ForkDriver(Driver):
+    """COW clone of a donor: share immutable weight buffers + in-memory program."""
+
+    name = "fork"
+
+    def __init__(self) -> None:
+        self._donors: Dict[str, Executor] = {}
+        self._lock = threading.Lock()
+
+    def ensure_donor(self, dep: Deployment) -> Executor:
+        with self._lock:
+            donor = self._donors.get(dep.image.key)
+            if donor is None or donor.params is None:
+                program = dep.load_program()
+                params = dep.snapshots.load_to_device(dep.image.key)
+                donor = Executor(dep.image.key, "fork-donor", program, params)
+                self._donors[dep.image.key] = donor
+            return donor
+
+    def start(self, dep: Deployment, tl: Timeline) -> Executor:
+        donor = self.ensure_donor(dep)
+        t0 = now()
+        ex = Executor(dep.image.key, self.name, donor.program, donor.params,
+                      shared_weights=True)
+        tl.t_program = 0.0
+        tl.t_weights = now() - t0
+        return ex
+
+    def donor_nbytes(self) -> int:
+        with self._lock:
+            return sum(d.nbytes for d in self._donors.values() if d.params is not None)
+
+
+class ProcessDriver(ForkDriver):
+    """Dispatch onto the resident donor itself — the pure platform-overhead floor."""
+
+    name = "process"
+
+    def start(self, dep: Deployment, tl: Timeline) -> Executor:
+        donor = self.ensure_donor(dep)
+        tl.t_program = 0.0
+        tl.t_weights = 0.0
+        return donor
+
+    def finish(self, dep: Deployment, ex: Executor) -> None:
+        pass  # donor stays resident
+
+
+class PausedDriver(Driver):
+    """Fn's paused containers: program cached, weights parked in host DRAM."""
+
+    name = "paused"
+
+    def __init__(self) -> None:
+        self._parked: Dict[str, tuple] = {}
+        self._lock = threading.Lock()
+
+    def ensure_parked(self, dep: Deployment) -> tuple:
+        with self._lock:
+            entry = self._parked.get(dep.image.key)
+            if entry is None:
+                program = dep.load_program()
+                host = dep.snapshots.load_host(dep.image.key, mmap=False)
+                host = jax.tree.map(np.ascontiguousarray, host)
+                entry = (program, host)
+                self._parked[dep.image.key] = entry
+            return entry
+
+    def start(self, dep: Deployment, tl: Timeline) -> Executor:
+        program, host = self.ensure_parked(dep)
+        tl.t_program = 0.0
+        t1 = now()
+        params = jax.block_until_ready(jax.tree.map(jax.device_put, host))
+        tl.t_weights = now() - t1
+        return Executor(dep.image.key, self.name, program, params)
+
+
+class WarmDriver(Driver):
+    """The incumbent: a pool of fully-resident executors (falls back cold on miss)."""
+
+    name = "warm"
+
+    def __init__(self, fallback: Optional[Driver] = None, on_exit=None) -> None:
+        self.fallback = fallback or UnikernelDriver()
+        self.on_exit = on_exit
+        self._pools: Dict[str, list] = {}
+        self._lock = threading.Lock()
+
+    def prewarm(self, dep: Deployment, n: int) -> None:
+        for _ in range(n):
+            ex = self.fallback.start(dep, Timeline())
+            ex.driver = self.name
+            with self._lock:
+                self._pools.setdefault(dep.image.key, []).append(ex)
+
+    def start(self, dep: Deployment, tl: Timeline) -> Executor:
+        with self._lock:
+            pool = self._pools.setdefault(dep.image.key, [])
+            if pool:
+                tl.t_program = 0.0
+                tl.t_weights = 0.0
+                return pool.pop()
+        ex = self.fallback.start(dep, tl)                    # cold miss
+        ex.driver = self.name
+        return ex
+
+    def finish(self, dep: Deployment, ex: Executor) -> None:
+        with self._lock:
+            self._pools.setdefault(dep.image.key, []).append(ex)
+
+    def pool_size(self, key: str) -> int:
+        with self._lock:
+            return len(self._pools.get(key, []))
+
+    def expire_idle(self, key: str, keep: int) -> list:
+        """Idle-timeout eviction (the knob the paper calls a lose-lose trade-off)."""
+        expired = []
+        with self._lock:
+            pool = self._pools.setdefault(key, [])
+            while len(pool) > keep:
+                expired.append(pool.pop())
+        for ex in expired:
+            ex.exit()
+            if self.on_exit is not None:
+                self.on_exit(ex)
+        return expired
+
+    def resident_nbytes(self) -> int:
+        with self._lock:
+            return sum(e.nbytes for pool in self._pools.values() for e in pool)
+
+
+class ColdJITDriver(Driver):
+    """Full Docker-stack analogue: re-trace + full XLA compile + generic checkpoint."""
+
+    name = "cold_jit"
+
+    def start(self, dep: Deployment, tl: Timeline) -> Executor:
+        t0 = now()
+        # fresh wrapper identity -> guaranteed re-trace + compile
+        fresh = jax.jit(lambda p, t: dep.serve_fn(p, t))
+        compiled = fresh.lower(dep.abstract_params, dep.abstract_tokens).compile()
+        tl.t_program = now() - t0
+        t1 = now()
+        params = load_generic_checkpoint(dep.generic_ckpt, dep.abstract_params)
+        params = jax.block_until_ready(params)
+        tl.t_weights = now() - t1
+        return Executor(dep.image.key, self.name, compiled, params)
+
+
+class ColdJITCachedDriver(ColdJITDriver):
+    """gVisor-tier: still re-traces, but XLA's persistent disk cache absorbs the
+    compile (enable via repro.core.compile_cache.enable_xla_disk_cache)."""
+
+    name = "cold_jit_cached"
+
+
+ALL_DRIVERS = ("process", "fork", "unikernel", "paused", "warm",
+               "cold_jit_cached", "cold_jit")
+
+
+def make_drivers(on_exit=None) -> Dict[str, Driver]:
+    fork = ForkDriver()
+    return {
+        "process": ProcessDriver(),
+        "fork": fork,
+        "unikernel": UnikernelDriver(),
+        "paused": PausedDriver(),
+        "warm": WarmDriver(on_exit=on_exit),
+        "cold_jit_cached": ColdJITCachedDriver(),
+        "cold_jit": ColdJITDriver(),
+    }

@@ -1,0 +1,98 @@
+"""Executor: one function-execution environment (the container/VM/unikernel analogue).
+
+Life cycle mirrors the paper's executor units:
+
+    BUILDING -> READY -> RUNNING -> (READY | PAUSED | EXITED)
+
+A *cold-only* platform drives every executor straight to EXITED after one request
+("the unikernel simply exits, and, in parallel, the user gets back the result" —
+Sec IV-A); a *warm-pool* platform parks it READY (holding device memory) or PAUSED
+(host memory only), which is precisely the resource waste the paper eliminates.
+"""
+from __future__ import annotations
+
+import enum
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.core.metrics import now
+
+
+class ExecutorState(enum.Enum):
+    BUILDING = "building"
+    READY = "ready"
+    RUNNING = "running"
+    PAUSED = "paused"
+    EXITED = "exited"
+
+
+def tree_nbytes(tree) -> int:
+    return int(sum(np.prod(x.shape) * jax.dtypes.canonicalize_dtype(x.dtype).itemsize
+                   for x in jax.tree.leaves(tree)))
+
+
+class Executor:
+    """A program + materialized weights, runnable for exactly one request shape."""
+
+    _counter = 0
+    _counter_lock = threading.Lock()
+
+    def __init__(self, image_key: str, driver: str, program: Callable, params: Any,
+                 shared_weights: bool = False) -> None:
+        with Executor._counter_lock:
+            Executor._counter += 1
+            self.eid = Executor._counter
+        self.image_key = image_key
+        self.driver = driver
+        self.program = program
+        self.params = params
+        self.shared_weights = shared_weights     # fork: weights aliased from a donor
+        self.nbytes = 0 if shared_weights else tree_nbytes(params)
+        self.state = ExecutorState.READY
+        self.t_created = now()
+        self.t_exited: Optional[float] = None
+        self.busy_seconds = 0.0
+        self._lock = threading.Lock()
+
+    # ---------------------------------------------------------------- running
+    def run(self, *args) -> Any:
+        with self._lock:
+            if self.state not in (ExecutorState.READY, ExecutorState.RUNNING):
+                raise RuntimeError(f"executor {self.eid} not runnable: {self.state}")
+            self.state = ExecutorState.RUNNING
+        t0 = now()
+        try:
+            out = self.program(self.params, *args)
+            out = jax.block_until_ready(out)
+        finally:
+            with self._lock:
+                self.busy_seconds += now() - t0
+                if self.state is ExecutorState.RUNNING:
+                    self.state = ExecutorState.READY
+        return out
+
+    # -------------------------------------------------------------- lifecycle
+    def pause(self) -> Any:
+        """Evict weights to host memory; returns the host copy (caller keeps it)."""
+        with self._lock:
+            host = jax.tree.map(np.asarray, self.params)
+            self.params = None
+            self.state = ExecutorState.PAUSED
+        return host
+
+    def exit(self) -> None:
+        """Drop all references — the unikernel's immediate exit."""
+        with self._lock:
+            self.params = None
+            self.program = None
+            self.state = ExecutorState.EXITED
+            self.t_exited = now()
+
+    # ---------------------------------------------------------------- queries
+    @property
+    def resident_seconds(self) -> float:
+        end = self.t_exited if self.t_exited is not None else now()
+        return end - self.t_created

@@ -1,0 +1,114 @@
+"""Gateway: the platform front door (deploy + invoke + /noop probe + reports).
+
+Composes the whole Fn-analogue stack:
+
+    Gateway -> Dispatcher -> (Cluster of Hosts) -> Agent -> Driver -> Executor
+
+``mode='cold'`` is the paper's proposal (every invoke = unikernel cold start, no
+pools, trivial scaling); ``mode='warm'`` is the incumbent (warm pools + autoscaler
++ idle timeouts). Both run the same functions through the same dispatcher so the
+comparison in benchmarks/bench_e2e.py is apples-to-apples.
+"""
+from __future__ import annotations
+
+import tempfile
+import threading
+from concurrent.futures import Future
+from pathlib import Path
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.agent import Agent
+from repro.core.artifact import FunctionSpec
+from repro.core.autoscaler import ColdOnlyScaler, WarmPoolAutoscaler
+from repro.core.cluster import Cluster
+from repro.core.compile_cache import CompileCache
+from repro.core.deploy import Deployment, deploy
+from repro.core.dispatcher import Dispatcher
+from repro.core.metrics import LatencyStats, Recorder, ResidencyTracker
+from repro.core.snapshot import SnapshotStore
+
+
+class Gateway:
+    def __init__(self, *, n_hosts: int = 1, slots_per_host: int = 4,
+                 mode: str = "cold", work_dir: Optional[str] = None,
+                 hedging: bool = True) -> None:
+        assert mode in ("cold", "warm")
+        self.mode = mode
+        self.work_dir = work_dir or tempfile.mkdtemp(prefix="repro_faas_")
+        Path(self.work_dir).mkdir(parents=True, exist_ok=True)
+        self.cache = CompileCache(Path(self.work_dir) / "images")
+        self.snapshots = SnapshotStore(Path(self.work_dir) / "snapshots")
+        self.recorder = Recorder()
+        self.residency = ResidencyTracker()
+        self.cluster = Cluster(n_hosts=n_hosts, slots_per_host=slots_per_host,
+                               on_exit=self._account_exit)
+        self.agent = Agent(self.recorder, self.residency)
+        self.dispatcher = Dispatcher(self.cluster, self.agent, hedging=hedging)
+        self.deployments: Dict[str, Deployment] = {}
+        if mode == "warm":
+            self.scaler = WarmPoolAutoscaler(self.cluster, self.deployments)
+        else:
+            self.scaler = ColdOnlyScaler()
+        self.scaler.start()
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------ deploy
+    def deploy(self, spec: FunctionSpec) -> Deployment:
+        """Build the ExecutorImage (the `fn deploy` + IncludeOS `boot` step)."""
+        dep = deploy(spec, self.cache, self.snapshots, self.work_dir)
+        with self._lock:
+            self.deployments[spec.name] = dep
+        return dep
+
+    # ------------------------------------------------------------------ invoke
+    def default_driver(self) -> str:
+        return "unikernel" if self.mode == "cold" else "warm"
+
+    def invoke_async(self, fn_name: str, tokens: Optional[np.ndarray] = None,
+                     driver: Optional[str] = None,
+                     label: Optional[str] = None) -> Future:
+        dep = self.deployments[fn_name]
+        driver = driver or self.default_driver()
+        self.scaler.observe_arrival(fn_name)
+        if tokens is None:
+            tokens = dep.example_tokens()
+        fut = self.dispatcher.submit(dep, tokens, driver, label=label)
+
+        def _observe(f: Future) -> None:
+            if f.exception() is None:
+                pass
+        fut.add_done_callback(_observe)
+        return fut
+
+    def invoke(self, fn_name: str, tokens: Optional[np.ndarray] = None,
+               driver: Optional[str] = None, label: Optional[str] = None,
+               timeout: float = 600.0):
+        return self.invoke_async(fn_name, tokens, driver, label).result(timeout)
+
+    def noop(self, label: str = "noop", timeout: float = 60.0):
+        """The paper's /noop URL: platform overhead with no function work."""
+        return self.dispatcher.submit(None, None, "noop", label=label).result(timeout)
+
+    # ----------------------------------------------------------------- reports
+    def stats(self, label: str, field: str = "e2e") -> LatencyStats:
+        return self.recorder.stats(label, field)
+
+    def residency_summary(self) -> Dict[str, float]:
+        return self.residency.summary()
+
+    def _account_exit(self, ex) -> None:
+        self.residency.add_residency(ex.nbytes, ex.resident_seconds, ex.busy_seconds)
+
+    # ---------------------------------------------------------------- shutdown
+    def shutdown(self) -> None:
+        self.scaler.stop()
+        # flush warm pools so their residency lands in the tracker (via on_exit)
+        for host in self.cluster.hosts:
+            warm = host.drivers.get("warm")
+            if warm is None:
+                continue
+            for key in list(getattr(warm, "_pools", {})):
+                warm.expire_idle(key, 0)
+        self.cluster.shutdown()

@@ -1,0 +1,131 @@
+"""Latency / residency metrics with the paper's reporting conventions.
+
+The paper reports boxplots with whiskers at the 1st/99th percentile (Sec III-B) and
+medians (Table I). ``LatencyStats`` reproduces exactly those statistics; ``Timeline``
+records the per-request phase breakdown (queue wait / startup / execution), mirroring
+the cold-start decomposition in Sec III-C; ``ResidencyTracker`` integrates
+device-memory-seconds so the warm-pool "resource waste" claim is measurable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class LatencyStats:
+    """Paper-style summary: median + quartiles + p1/p99 whiskers."""
+
+    n: int
+    p1: float
+    p25: float
+    p50: float
+    p75: float
+    p99: float
+    mean: float
+
+    @classmethod
+    def from_samples(cls, samples_s: List[float]) -> "LatencyStats":
+        a = np.asarray(samples_s, dtype=np.float64) * 1e3  # report in ms like the paper
+        if a.size == 0:
+            return cls(0, *([float("nan")] * 6))
+        q = np.percentile(a, [1, 25, 50, 75, 99])
+        return cls(int(a.size), float(q[0]), float(q[1]), float(q[2]), float(q[3]),
+                   float(q[4]), float(a.mean()))
+
+    def row(self) -> str:
+        return (f"n={self.n:5d}  p1={self.p1:9.3f}  p25={self.p25:9.3f}  "
+                f"p50={self.p50:9.3f}  p75={self.p75:9.3f}  p99={self.p99:9.3f} ms")
+
+
+@dataclasses.dataclass
+class Timeline:
+    """Per-request phase timestamps (seconds, monotonic clock)."""
+
+    t_enqueue: float = 0.0
+    t_dispatch: float = 0.0          # dispatcher picked it up
+    t_start_begin: float = 0.0       # executor instantiation began
+    t_exec_begin: float = 0.0        # function body began
+    t_done: float = 0.0
+    # startup decomposition (paper Sec III-C: runtime layers)
+    t_program: float = 0.0           # acquire compiled program (trace/compile/deserialize)
+    t_weights: float = 0.0           # materialize weights on device
+
+    @property
+    def queue_wait(self) -> float:
+        return self.t_dispatch - self.t_enqueue
+
+    @property
+    def startup(self) -> float:
+        return self.t_exec_begin - self.t_start_begin
+
+    @property
+    def execution(self) -> float:
+        return self.t_done - self.t_exec_begin
+
+    @property
+    def e2e(self) -> float:
+        return self.t_done - self.t_enqueue
+
+
+class Recorder:
+    """Thread-safe collection of per-request timelines, grouped by label."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._groups: Dict[str, List[Timeline]] = {}
+
+    def add(self, label: str, tl: Timeline) -> None:
+        with self._lock:
+            self._groups.setdefault(label, []).append(tl)
+
+    def stats(self, label: str, field: str = "e2e") -> LatencyStats:
+        with self._lock:
+            tls = list(self._groups.get(label, []))
+        return LatencyStats.from_samples([getattr(t, field) for t in tls])
+
+    def labels(self) -> List[str]:
+        with self._lock:
+            return sorted(self._groups)
+
+    def timelines(self, label: str) -> List[Timeline]:
+        with self._lock:
+            return list(self._groups.get(label, []))
+
+
+class ResidencyTracker:
+    """Integrates bytes x seconds of device residency, split busy vs idle.
+
+    The paper's core resource argument: warm pools hold memory while idle. Every
+    executor reports (bytes, busy intervals); idle byte-seconds = total - busy.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.total_byteseconds = 0.0
+        self.busy_byteseconds = 0.0
+
+    def add_residency(self, nbytes: int, resident_s: float, busy_s: float) -> None:
+        with self._lock:
+            self.total_byteseconds += nbytes * resident_s
+            self.busy_byteseconds += nbytes * min(busy_s, resident_s)
+
+    @property
+    def idle_byteseconds(self) -> float:
+        return self.total_byteseconds - self.busy_byteseconds
+
+    def summary(self) -> Dict[str, float]:
+        with self._lock:
+            return {
+                "total_GBs": self.total_byteseconds / 1e9,
+                "busy_GBs": self.busy_byteseconds / 1e9,
+                "idle_GBs": (self.total_byteseconds - self.busy_byteseconds) / 1e9,
+            }
+
+
+def now() -> float:
+    return time.perf_counter()

@@ -1,0 +1,110 @@
+"""Pallas TPU flash-decoding: one query token vs a deep KV cache.
+
+Decode attention is bandwidth-bound (one pass over the KV cache per token, almost
+no compute), so the kernel's whole job is streaming K/V through VMEM exactly once
+with online-softmax state in scratch. Grid: (B, Hkv, kv_blocks) — kv innermost and
+sequential, so (m, l, acc) scratch carries across the KV sweep per (batch, kv-head);
+all G = Hq/Hkv query heads of the group ride in one [G, D] block (MXU-friendly for
+GQA: the [G, D] x [D, block_kv] score matmul).
+
+Length masking comes in as an s32[B, 1] operand (positions >= length are dead —
+cache slots not yet written).
+
+Oracle: repro.kernels.ref.decode_attention.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import ref
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_KV = 512
+
+
+def _dec_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                block_kv: int, n_kv_blocks: int, s_max: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0, :, :].astype(jnp.float32)                   # [G, D]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)                   # [bk, D]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    length = jnp.minimum(len_ref[0, 0], s_max)
+
+    kv_pos = ik * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (q.shape[0], block_kv), 1)                   # [G, bk]
+    valid = kv_pos < length
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]                                          # [G, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new) * valid
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0, :, :] = (acc_scr[...] / l_safe).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, length, *,
+                     block_kv: int = DEFAULT_BLOCK_KV, interpret: bool = False):
+    """q: [B, Hq, D]; k_cache, v_cache: [B, S, Hkv, D]; length: [] or [B] ->
+    [B, Hq, D]."""
+    B, Hq, D = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    assert Hq % Hkv == 0
+    G = Hq // Hkv
+    block_kv = min(block_kv, max(8, 1 << (S - 1).bit_length()))
+
+    pad = (-S) % block_kv
+    if pad:
+        widths = ((0, 0), (0, pad), (0, 0), (0, 0))
+        k_cache = jnp.pad(k_cache, widths)
+        v_cache = jnp.pad(v_cache, widths)
+    nk = k_cache.shape[1] // block_kv
+    lengths = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (B,)).reshape(B, 1)
+    qg = q.reshape(B, Hkv, G, D)
+
+    kernel = functools.partial(_dec_kernel, block_kv=block_kv, n_kv_blocks=nk,
+                               s_max=S)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, ik: (b, 0)),                 # lengths
+            pl.BlockSpec((1, 1, G, D), lambda b, h, ik: (b, h, 0, 0)),     # q group
+            pl.BlockSpec((1, block_kv, 1, D), lambda b, h, ik: (b, ik, h, 0)),
+            pl.BlockSpec((1, block_kv, 1, D), lambda b, h, ik: (b, ik, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, ik: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths, qg, k_cache, v_cache)
+    return out.reshape(B, Hq, D)

@@ -1,0 +1,108 @@
+"""Pallas TPU Mamba selective scan, chunked with VMEM-resident state carry.
+
+TPU adaptation of the CUDA selective-scan kernel: instead of one thread-block per
+channel slab doing a warp scan, the grid is (B, Di_blocks, seq_chunks) with the seq
+axis innermost/sequential — the [block_di, Ds] SSM state lives in VMEM scratch and
+carries across chunk steps, so HBM sees each (x, dt, B, C) element exactly once and
+the state never round-trips. Inside a chunk the recurrence runs as a fori_loop over
+time steps on [block_di, Ds] vector registers (VPU work — the op is bandwidth-bound,
+there is no MXU shape here).
+
+Oracle: repro.kernels.ref.selective_scan (chunked associative form).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_DI = 512
+DEFAULT_CHUNK = 64
+
+
+def _scan_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, h0_ref,
+                 y_ref, hout_ref, h_scr, *, chunk: int, n_chunks: int, seq: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scr[...] = h0_ref[0, :, :].astype(jnp.float32)
+
+    x = x_ref[0, :, :].astype(jnp.float32)          # [chunk, bdi]
+    dt = dt_ref[0, :, :].astype(jnp.float32)        # [chunk, bdi]
+    a = -jnp.exp(a_ref[:, :].astype(jnp.float32))   # [bdi, Ds]
+    bmat = b_ref[0, :, :].astype(jnp.float32)       # [chunk, Ds]
+    cmat = c_ref[0, :, :].astype(jnp.float32)       # [chunk, Ds]
+    d_skip = d_ref[0, :].astype(jnp.float32)        # [bdi]
+
+    def step(t, carry):
+        h, ys = carry
+        decay = jnp.exp(dt[t][:, None] * a)                        # [bdi, Ds]
+        h = decay * h + (dt[t] * x[t])[:, None] * bmat[t][None, :]
+        y_t = jnp.sum(h * cmat[t][None, :], axis=-1) + d_skip * x[t]
+        ys = jax.lax.dynamic_update_slice(ys, y_t[None, :], (t, 0))
+        return h, ys
+
+    h0 = h_scr[...]
+    ys0 = jnp.zeros((chunk, x.shape[1]), jnp.float32)
+    h, ys = jax.lax.fori_loop(0, chunk, step, (h0, ys0))
+    h_scr[...] = h
+    y_ref[0, :, :] = ys.astype(y_ref.dtype)
+
+    @pl.when(ic == n_chunks - 1)
+    def _final():
+        hout_ref[0, :, :] = h_scr[...]
+
+
+def selective_scan(x, dt, a_log, b, c, d_skip, h0=None, *,
+                   block_di: int = DEFAULT_BLOCK_DI, chunk: int = DEFAULT_CHUNK,
+                   interpret: bool = False):
+    """x, dt: [B,S,Di]; a_log: [Di,Ds]; b, c: [B,S,Ds]; d_skip: [Di];
+    h0: optional [B,Di,Ds]. Returns (y [B,S,Di], h_final [B,Di,Ds])."""
+    B, S, Di = x.shape
+    Ds = a_log.shape[1]
+    block_di = min(block_di, Di)
+    chunk = min(chunk, max(8, 1 << (S - 1).bit_length()))
+    assert Di % block_di == 0, (Di, block_di)
+    if h0 is None:
+        h0 = jnp.zeros((B, Di, Ds), jnp.float32)
+
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))   # dt=0 -> decay=1, no input
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    Sp = x.shape[1]
+    nc = Sp // chunk
+    nd = Di // block_di
+    d2 = d_skip.reshape(1, Di)
+
+    kernel = functools.partial(_scan_kernel, chunk=chunk, n_chunks=nc, seq=S)
+    y, h_final = pl.pallas_call(
+        kernel,
+        grid=(B, nd, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_di), lambda bi, di, ic: (bi, ic, di)),  # x
+            pl.BlockSpec((1, chunk, block_di), lambda bi, di, ic: (bi, ic, di)),  # dt
+            pl.BlockSpec((block_di, Ds), lambda bi, di, ic: (di, 0)),             # a_log
+            pl.BlockSpec((1, chunk, Ds), lambda bi, di, ic: (bi, ic, 0)),         # b
+            pl.BlockSpec((1, chunk, Ds), lambda bi, di, ic: (bi, ic, 0)),         # c
+            pl.BlockSpec((1, block_di), lambda bi, di, ic: (0, di)),              # d_skip
+            pl.BlockSpec((1, block_di, Ds), lambda bi, di, ic: (bi, di, 0)),      # h0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_di), lambda bi, di, ic: (bi, ic, di)),
+            pl.BlockSpec((1, block_di, Ds), lambda bi, di, ic: (bi, di, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Sp, Di), x.dtype),
+            jax.ShapeDtypeStruct((B, Di, Ds), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_di, Ds), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a_log, b, c, d2, h0)
+    return y[:, :S], h_final

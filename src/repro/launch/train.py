@@ -1,0 +1,55 @@
+"""Training CLI.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --reduced \\
+      --steps 100 --seq-len 128 --batch 8 --ckpt-dir /tmp/run1
+  # resume after interruption: identical command (restores latest checkpoint)
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from repro.configs import get_config, list_archs
+from repro.optim import AdamWConfig
+from repro.train import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs(), required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--opt-state-dtype", default="float32",
+                    choices=("float32", "bfloat16", "int8"))
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--dtype", default=None, help="override model dtype (e.g. float32)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.dtype:
+        cfg = dataclasses.replace(cfg, dtype=args.dtype)
+
+    tcfg = TrainerConfig(
+        seq_len=args.seq_len, global_batch=args.batch, steps=args.steps,
+        ckpt_every=args.ckpt_every, grad_accum=args.grad_accum, seed=args.seed)
+    ocfg = AdamWConfig(peak_lr=args.lr, warmup=args.warmup, total_steps=args.steps,
+                       state_dtype=args.opt_state_dtype)
+    trainer = Trainer(cfg, tcfg, ocfg, ckpt_dir=args.ckpt_dir)
+    out = trainer.run()
+    print(f"final loss: {out['final_loss']:.4f}; "
+          f"straggler events: {len(trainer.straggler_events)}")
+
+
+if __name__ == "__main__":
+    main()

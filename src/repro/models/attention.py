@@ -1,0 +1,119 @@
+"""GQA attention in three modes: full (train), prefill (returns KV), cached decode."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import active_rules, constrain, current_mesh
+from repro.kernels import ops
+from repro.models.layers import ParamSpec, bias_spec, dense_spec, positional
+
+
+def attention_specs(cfg, dtype, stack: Tuple[int, ...] = ()):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    s = {
+        "wq": dense_spec(d, nq * hd, ("embed", "heads_flat"), dtype, stack=stack),
+        "wk": dense_spec(d, nkv * hd, ("embed", "kv_flat"), dtype, stack=stack),
+        "wv": dense_spec(d, nkv * hd, ("embed", "kv_flat"), dtype, stack=stack),
+        "wo": dense_spec(nq * hd, d, ("heads_flat", "embed"), dtype, stack=stack),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = bias_spec(nq * hd, "heads_flat", dtype, stack=stack)
+        s["bk"] = bias_spec(nkv * hd, "kv_flat", dtype, stack=stack)
+        s["bv"] = bias_spec(nkv * hd, "kv_flat", dtype, stack=stack)
+    if cfg.mlp_bias:
+        s["bo"] = bias_spec(d, None, dtype, stack=stack)
+    return s
+
+
+def _proj_q(cfg, p, x):
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    return q.reshape(B, S, cfg.n_heads, cfg.resolved_head_dim)
+
+
+def _proj_kv(cfg, p, x):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    return (k.reshape(B, S, cfg.n_kv_heads, hd), v.reshape(B, S, cfg.n_kv_heads, hd))
+
+
+def _out(cfg, p, o):
+    B, S = o.shape[:2]
+    y = jnp.einsum("bsh,hd->bsd", o.reshape(B, S, -1), p["wo"])
+    if "bo" in p:
+        y = y + p["bo"]
+    return constrain(y, "batch", "seq", "embed")
+
+
+def attention_full(cfg, p: dict, x: jax.Array, positions: Optional[jax.Array], *,
+                   causal: bool = True, kv_from: Optional[jax.Array] = None,
+                   q_offset=0):
+    """Full-sequence attention. kv_from: encoder output for cross-attention.
+
+    Returns (y [B,S,d], (k, v)) — k/v handed back so prefill can fill the cache.
+    """
+    q = _proj_q(cfg, p, x)
+    src = x if kv_from is None else kv_from
+    k, v = _proj_kv(cfg, p, src)
+    if kv_from is None and positions is not None:
+        q = positional(cfg, q, positions)
+        k = positional(cfg, k, positions)
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    k = constrain(k, "batch", "kv_seq", "kv_heads", "head_dim")
+    v = constrain(v, "batch", "kv_seq", "kv_heads", "head_dim")
+    o = ops.attention(q, k, v, causal=causal and kv_from is None, q_offset=q_offset)
+    return _out(cfg, p, o), (k, v)
+
+
+def attention_decode(cfg, p: dict, x_t: jax.Array, k_cache: jax.Array,
+                     v_cache: jax.Array, pos: jax.Array, *, cross: bool = False):
+    """One-token attention against a cache.
+
+    x_t: [B,1,d]; k_cache/v_cache: [B,S,nkv,hd]; pos: int32 scalar (next position).
+    Returns (y [B,1,d], k_cache', v_cache').
+    """
+    B = x_t.shape[0]
+    q = _proj_q(cfg, p, x_t)                                          # [B,1,nq,hd]
+    if not cross:
+        if cfg.rope != "none":
+            ppos = _decode_positions(cfg, B, pos)
+            q = positional(cfg, q, ppos)
+        k_t, v_t = _proj_kv(cfg, p, x_t)                              # [B,1,nkv,hd]
+        if cfg.rope != "none":
+            k_t = positional(cfg, k_t, ppos)
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k_t.astype(k_cache.dtype),
+                                               (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v_t.astype(v_cache.dtype),
+                                               (0, pos, 0, 0))
+        length = pos + 1
+    else:
+        length = k_cache.shape[1]
+    k_cache = constrain(k_cache, "batch", "kv_seq", "kv_heads", "head_dim")
+    v_cache = constrain(v_cache, "batch", "kv_seq", "kv_heads", "head_dim")
+    # distributed flash decoding when the cache sequence dim is mesh-sharded
+    from repro.dist.flash_decode import decode_attention_seqsharded, seq_shard_axis
+    rules, mesh = active_rules(), current_mesh()
+    axis = seq_shard_axis(rules, mesh, k_cache.shape[1])
+    if axis is not None:
+        o = decode_attention_seqsharded(q[:, 0], k_cache, v_cache, length,
+                                        mesh, axis)
+    else:
+        o = ops.decode_attention(q[:, 0], k_cache, v_cache, length)   # [B,nq,hd]
+    return _out(cfg, p, o[:, None]), k_cache, v_cache
+
+
+def _decode_positions(cfg, batch: int, pos) -> jax.Array:
+    base = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (batch, 1))
+    if cfg.rope == "mrope":
+        return jnp.broadcast_to(base[None], (3, batch, 1))
+    return base

@@ -1,0 +1,43 @@
+"""Modality frontend STUBS (per assignment: backbone only, frontends precomputed).
+
+* audio (whisper): ``input_specs`` provides [B, encoder_seq, d_model] frame embeddings
+  — what the 2x-strided conv stem would produce from 30 s of log-mel spectrogram.
+* vision (qwen2-vl): [B, N_PATCHES, d_model] patch embeddings — what the ViT patch
+  merger would produce for one image at base resolution; merged at prefix positions,
+  with M-RoPE (t, h, w) position ids over the patch grid.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+N_PATCHES = 256  # 16x16 patch grid stub for the VLM (full-size shapes)
+
+
+def n_patches_for(seq_len: int) -> int:
+    """Largest square patch grid that fits in half the sequence (caps at 16x16)."""
+    import math
+    g = min(16, max(int(math.isqrt(max(seq_len // 2, 1))), 1))
+    return g * g
+
+
+def frontend_input_specs(cfg, batch: int, seq_len: int):
+    """Extra abstract inputs the frontend stub injects, keyed by batch field name."""
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.frontend == "audio":
+        return {"frames": jax.ShapeDtypeStruct((batch, cfg.encoder_seq, cfg.d_model), dt)}
+    if cfg.frontend == "vision":
+        np_ = n_patches_for(seq_len)
+        return {"patches": jax.ShapeDtypeStruct((batch, np_, cfg.d_model), dt)}
+    return {}
+
+
+def synth_frontend(cfg, batch: int, seq_len: int, key: jax.Array):
+    """Random stand-ins for the precomputed embeddings (smoke tests / examples)."""
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.frontend == "audio":
+        return {"frames": jax.random.normal(key, (batch, cfg.encoder_seq, cfg.d_model), dt)}
+    if cfg.frontend == "vision":
+        np_ = n_patches_for(seq_len)
+        return {"patches": jax.random.normal(key, (batch, np_, cfg.d_model), dt)}
+    return {}

@@ -1,0 +1,272 @@
+"""Shared building blocks: ParamSpec machinery, norms, RoPE/M-RoPE, MLPs, embeddings.
+
+Parameters are described ONCE as a tree of :class:`ParamSpec` (shape, dtype, logical
+axes, initializer). Everything else derives from that single source of truth:
+
+* ``init_tree(specs, key)``            -> concrete parameter pytree (real arrays)
+* ``repro.dist.abstract_state(specs)`` -> ShapeDtypeStruct pytree (dry-run, no alloc)
+* ``repro.dist.param_shardings(...)``  -> NamedSharding pytree for pjit in_shardings
+
+Model apply-functions consume the plain array pytree (same structure as the spec tree).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import constrain
+
+Initializer = Callable[[jax.Array, Tuple[int, ...], jnp.dtype], jax.Array]
+
+
+# ------------------------------------------------------------------ param specs
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    dtype: jnp.dtype
+    axes: Tuple[Optional[str], ...]
+    init: Initializer
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"ParamSpec rank mismatch: {self.shape} vs {self.axes}")
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def normal_init(stddev: float, fan_in_axis: Optional[int] = None) -> Initializer:
+    """Truncated-normal-ish init; if fan_in_axis given, stddev = scale/sqrt(fan_in)."""
+
+    def init(key, shape, dtype):
+        if fan_in_axis is not None:
+            std = stddev / np.sqrt(shape[fan_in_axis])
+        else:
+            std = stddev
+        return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+    return init
+
+
+def zeros_init() -> Initializer:
+    return lambda key, shape, dtype: jnp.zeros(shape, dtype)
+
+
+def ones_init() -> Initializer:
+    return lambda key, shape, dtype: jnp.ones(shape, dtype)
+
+
+def const_init(value: float) -> Initializer:
+    return lambda key, shape, dtype: jnp.full(shape, value, dtype)
+
+
+def dense_spec(d_in: int, d_out: int, axes: Tuple[Optional[str], ...],
+               dtype, *, stack: Tuple[int, ...] = (), scale: float = 1.0) -> ParamSpec:
+    """Weight [*, d_in, d_out] with 1/sqrt(d_in) init (stack axes lead)."""
+    stack_axes = ("layers",) * len(stack)
+    return ParamSpec(
+        shape=(*stack, d_in, d_out),
+        dtype=dtype,
+        axes=(*stack_axes, *axes),
+        init=normal_init(scale, fan_in_axis=len(stack)),
+    )
+
+
+def bias_spec(d: int, axis: Optional[str], dtype, *, stack: Tuple[int, ...] = ()) -> ParamSpec:
+    return ParamSpec((*stack, d), dtype, (*("layers",) * len(stack), axis), zeros_init())
+
+
+def init_tree(specs, key: jax.Array):
+    """Materialize a ParamSpec tree into an array pytree (deterministic per-path)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    arrs = [s.init(k, s.shape, s.dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def count_params(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=_is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+# ------------------------------------------------------------------------ norms
+
+def rms_norm(x: jax.Array, weight: Optional[jax.Array], eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    if weight is not None:
+        y = y * weight.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, weight: Optional[jax.Array], bias: Optional[jax.Array],
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    if weight is not None:
+        y = y * weight.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def norm_specs(cfg, dtype, stack: Tuple[int, ...] = ()):
+    """Norm parameter specs for one norm site (may be empty for olmo's non-param LN)."""
+    if cfg.norm == "layernorm_np":
+        return {}
+    stack_axes = ("layers",) * len(stack)
+    out = {"scale": ParamSpec((*stack, cfg.d_model), dtype, (*stack_axes, None), ones_init())}
+    if cfg.norm == "layernorm":
+        out["bias"] = ParamSpec((*stack, cfg.d_model), dtype, (*stack_axes, None), zeros_init())
+    return out
+
+
+def apply_norm(cfg, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.norm == "rmsnorm":
+        return rms_norm(x, p["scale"])
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"])
+    if cfg.norm == "layernorm_np":
+        return layer_norm(x, None, None)
+    raise ValueError(cfg.norm)
+
+
+# ------------------------------------------------------------------------- RoPE
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, hd]; positions: [B, S] int32."""
+    hd = x.shape[-1]
+    inv = jnp.asarray(rope_freqs(hd, theta), jnp.float32)           # [hd/2]
+    ang = positions.astype(jnp.float32)[..., None] * inv            # [B, S, hd/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# M-RoPE (Qwen2-VL): rotary sections over (temporal, height, width) position ids.
+MROPE_SECTION_FRACS = (0.25, 0.375, 0.375)  # qwen2-vl uses [16, 24, 24] of 64 pairs
+
+
+def mrope_sections(head_dim: int) -> Tuple[int, int, int]:
+    half = head_dim // 2
+    t = int(half * MROPE_SECTION_FRACS[0])
+    h = int(half * MROPE_SECTION_FRACS[1])
+    return (t, h, half - t - h)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, hd]; positions: [3, B, S] int32 (t/h/w position ids)."""
+    hd = x.shape[-1]
+    inv = jnp.asarray(rope_freqs(hd, theta), jnp.float32)            # [hd/2]
+    # per-axis angles then interleave sections: freqs are split into 3 contiguous chunks
+    secs = mrope_sections(hd)
+    ang_parts = []
+    start = 0
+    for axis, sec in enumerate(secs):
+        pos = positions[axis].astype(jnp.float32)[..., None]         # [B, S, 1]
+        ang_parts.append(pos * inv[start : start + sec])
+        start += sec
+    ang = jnp.concatenate(ang_parts, axis=-1)                        # [B, S, hd/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def positional(cfg, q_or_k: jax.Array, positions: jax.Array) -> jax.Array:
+    if cfg.rope == "rope":
+        return apply_rope(q_or_k, positions, cfg.rope_theta)
+    if cfg.rope == "mrope":
+        return apply_mrope(q_or_k, positions, cfg.rope_theta)
+    return q_or_k
+
+
+# -------------------------------------------------------------------------- MLP
+
+def mlp_specs(cfg, dtype, d_ff: Optional[int] = None, stack: Tuple[int, ...] = ()):
+    ff = cfg.d_ff if d_ff is None else d_ff
+    if ff == 0:
+        return {}
+    if cfg.act in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_spec(cfg.d_model, ff, ("embed", "ffn"), dtype, stack=stack),
+            "w_up": dense_spec(cfg.d_model, ff, ("embed", "ffn"), dtype, stack=stack),
+            "w_down": dense_spec(ff, cfg.d_model, ("ffn", "embed"), dtype, stack=stack),
+        }
+    out = {
+        "w_up": dense_spec(cfg.d_model, ff, ("embed", "ffn"), dtype, stack=stack),
+        "w_down": dense_spec(ff, cfg.d_model, ("ffn", "embed"), dtype, stack=stack),
+    }
+    if cfg.mlp_bias:
+        out["b_up"] = bias_spec(ff, "ffn", dtype, stack=stack)
+        out["b_down"] = bias_spec(cfg.d_model, None, dtype, stack=stack)
+    return out
+
+
+def apply_mlp(cfg, p: dict, x: jax.Array) -> jax.Array:
+    """x: [B, S, d] -> [B, S, d]."""
+    if not p:
+        return jnp.zeros_like(x)
+    if cfg.act in ("swiglu", "geglu"):
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+        g = constrain(g, "batch", "seq", "ffn")
+        act = jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)
+        h = act * u
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+        if "b_up" in p:
+            h = h + p["b_up"]
+        h = constrain(h, "batch", "seq", "ffn")
+        h = jax.nn.gelu(h)
+    y = jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    if "b_down" in p:
+        y = y + p["b_down"]
+    return constrain(y, "batch", "seq", "embed")
+
+
+# -------------------------------------------------------------------- embedding
+
+def embedding_specs(cfg, dtype, max_seq: int):
+    out = {"tok": ParamSpec((cfg.vocab_size, cfg.d_model), dtype, ("vocab", "embed"),
+                            normal_init(1.0, fan_in_axis=1))}
+    if not cfg.tie_embeddings:
+        out["unembed"] = ParamSpec((cfg.d_model, cfg.vocab_size), dtype, ("embed", "vocab"),
+                                   normal_init(1.0, fan_in_axis=0))
+    if cfg.rope == "none" and cfg.ssm is None:
+        # learned absolute positions (whisper decoder)
+        out["pos"] = ParamSpec((max_seq, cfg.d_model), dtype, (None, "embed"),
+                               normal_init(0.02))
+    return out
+
+
+def embed_tokens(cfg, p: dict, tokens: jax.Array, pos_offset: jax.Array | int = 0) -> jax.Array:
+    x = jnp.take(p["tok"], tokens, axis=0)
+    if "pos" in p:
+        S = tokens.shape[1]
+        idx = pos_offset + jnp.arange(S)
+        x = x + jnp.take(p["pos"], idx, axis=0)[None]
+    return constrain(x.astype(jnp.dtype(cfg.dtype)), "batch", "seq", "embed")
+
+
+def logits_head(cfg, emb_params: dict, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = emb_params["tok"].T
+    else:
+        w = emb_params["unembed"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    return constrain(logits, "batch", "seq", "vocab")

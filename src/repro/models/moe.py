@@ -1,0 +1,233 @@
+"""Top-k routed mixture-of-experts (sort-based dispatch, GShard-style capacity).
+
+Dispatch: flatten tokens -> top-k expert ids -> stable argsort by expert ->
+position-in-expert via searchsorted -> scatter into a dense [E, C, d] buffer ->
+batched expert GEMMs -> gather-combine with router gates. The [E, ...] axes carry the
+'experts' logical axis, so expert parallelism is a sharding-rule choice (EP over
+'model' by default; 2D EP over ('data',) x expert_ffn over 'model' for the 384-expert
+Kimi via the 'train_ep2d' preset).
+
+Supports the assigned MoE variants:
+  * shared (always-on) experts        — Kimi-K2 (DeepSeek recipe)
+  * first-k-dense layers              — Kimi-K2 (handled at the stack level)
+  * dense residual MLP in parallel    — Arctic
+  * MoE every Nth layer               — Jamba (handled at the stack level)
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import active_rules, constrain
+from repro.models.layers import ParamSpec, dense_spec, mlp_specs, apply_mlp, normal_init
+
+
+def expert_capacity(n_tokens: int, n_experts: int, top_k: int, capacity_factor: float) -> int:
+    c = int(math.ceil(n_tokens * top_k * capacity_factor / n_experts))
+    c = int(math.ceil(c / 8.0) * 8)                   # lane-friendly
+    return max(8, min(c, max(n_tokens, 8)))
+
+
+def moe_specs(cfg, dtype, stack: Tuple[int, ...] = ()):
+    m = cfg.moe
+    d, ff, E = cfg.d_model, m.d_ff_expert, m.n_experts
+    sa = ("layers",) * len(stack)
+    gated = cfg.act in ("swiglu", "geglu")
+    s = {
+        "router": ParamSpec((*stack, d, E), jnp.float32, (*sa, "embed", None),
+                            normal_init(1.0, fan_in_axis=len(stack))),
+        "w_up": ParamSpec((*stack, E, d, ff), dtype, (*sa, "experts", "embed", "expert_ffn"),
+                          normal_init(1.0, fan_in_axis=len(stack) + 1)),
+        "w_down": ParamSpec((*stack, E, ff, d), dtype, (*sa, "experts", "expert_ffn", "embed"),
+                            normal_init(1.0, fan_in_axis=len(stack) + 1)),
+    }
+    if gated:
+        s["w_gate"] = ParamSpec((*stack, E, d, ff), dtype,
+                                (*sa, "experts", "embed", "expert_ffn"),
+                                normal_init(1.0, fan_in_axis=len(stack) + 1))
+    if m.n_shared_experts:
+        s["shared"] = mlp_specs(cfg, dtype, d_ff=ff * m.n_shared_experts, stack=stack)
+    if m.dense_residual:
+        s["dense"] = mlp_specs(cfg, dtype, d_ff=m.d_ff_dense or cfg.d_ff, stack=stack)
+    return s
+
+
+def _dispatch_shards(batch: int) -> int:
+    """How many ways the token stream is split for local dispatch (1 = global)."""
+    rules = active_rules()
+    if rules is None or rules.mapping.get("moe_dispatch") != "local":
+        return 1
+    spec = rules.spec(("batch",), (batch,))
+    part = spec[0]
+    if part is None:
+        return 1
+    names = (part,) if isinstance(part, str) else part
+    n = 1
+    for name in names:
+        n *= rules.mesh_axis_sizes.get(name, 1)
+    return n
+
+
+def moe_forward(cfg, p: dict, x: jax.Array, *, capacity_factor: float):
+    """x: [B, S, d] -> (y [B, S, d], aux_loss scalar fp32).
+
+    Two dispatch modes (selected by the sharding rules, see DESIGN/EXPERIMENTS):
+      * global (baseline): one argsort/capacity over ALL tokens — simple, but on a
+        sharded mesh the sort and the combine-scatter become cross-device.
+      * local ("moe_dispatch: local"): tokens reshape to [shards, T/shards, ...];
+        sort/capacity/scatter happen per data shard (zero cross-device traffic),
+        and the only collective left is the canonical EP all-to-all when the
+        [E, shards*C_local, d] buffer reshards from data-major to expert-major.
+    """
+    shards = _dispatch_shards(x.shape[0])
+    if shards > 1:
+        return _moe_forward_local(cfg, p, x, capacity_factor, shards)
+    return _moe_forward_global(cfg, p, x, capacity_factor)
+
+
+def _expert_gemms(cfg, p, xg):
+    """xg: [E, C, d] -> [E, C, d] through the gated expert MLPs."""
+    if "w_gate" in p:
+        g = jnp.einsum("ecd,edf->ecf", xg, p["w_gate"])
+        u = jnp.einsum("ecd,edf->ecf", xg, p["w_up"])
+        g = constrain(g, "experts", None, "expert_ffn")
+        act = jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)
+        h = act * u
+    else:
+        h = jnp.einsum("ecd,edf->ecf", xg, p["w_up"])
+        h = constrain(h, "experts", None, "expert_ffn")
+        h = jax.nn.gelu(h)
+    out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    return constrain(out, "experts", None, None)
+
+
+def _moe_forward_global(cfg, p: dict, x: jax.Array, capacity_factor: float):
+    m = cfg.moe
+    B, S, d = x.shape
+    T, E, k = B * S, m.n_experts, m.top_k
+    xt = x.reshape(T, d)
+
+    # ---- routing (fp32) ----
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)                        # [T, k]
+    gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    # load-balance aux (Switch/GShard) + router z-loss
+    me = jnp.mean(probs, axis=0)                                           # [E]
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_idx, E, dtype=jnp.float32), axis=1), axis=0)
+    aux = E * jnp.sum(me * ce) * m.router_aux_weight
+    zloss = 1e-3 * jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    aux = aux + zloss
+
+    # ---- sort-based dispatch ----
+    C = expert_capacity(T, E, k, capacity_factor)
+    fe = expert_idx.reshape(T * k)
+    ftok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    fgate = gate_vals.reshape(T * k)
+    order = jnp.argsort(fe, stable=True)                                   # priority = position
+    fe_s, ftok_s, fg_s = fe[order], ftok[order], fgate[order]
+    starts = jnp.searchsorted(fe_s, jnp.arange(E, dtype=fe_s.dtype), side="left")
+    pos_in_e = jnp.arange(T * k, dtype=jnp.int32) - starts[fe_s].astype(jnp.int32)
+    keep = pos_in_e < C
+    slot = jnp.where(keep, fe_s.astype(jnp.int32) * C + pos_in_e, E * C)   # E*C = trash row
+
+    gathered = jnp.where(keep[:, None], xt[ftok_s], 0)                     # [T*k, d]
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[slot].add(gathered.astype(x.dtype))
+    xg = buf[: E * C].reshape(E, C, d)
+    xg = constrain(xg, "experts", None, None)
+
+    out = _expert_gemms(cfg, p, xg)                                         # [E, C, d]
+
+    # ---- combine ----
+    # combine in the model dtype: the scatter buffer and its cotangents are the
+    # largest tensors crossing shardings — fp32 here doubled the MoE collective
+    # bytes (EXPERIMENTS.md §Perf, kimi iteration 2). Gates sum to 1, so bf16
+    # accumulation of <= top_k+shared terms is numerically benign.
+    flat = out.reshape(E * C, d)
+    contrib = jnp.where(keep[:, None], flat[jnp.minimum(slot, E * C - 1)], 0)
+    contrib = contrib * fg_s[:, None].astype(contrib.dtype)
+    y = jnp.zeros((T, d), x.dtype).at[ftok_s].add(contrib.astype(x.dtype))
+
+    # ---- always-on paths ----
+    if "shared" in p:
+        y = y + apply_mlp(cfg, p["shared"], x).reshape(T, d)
+    if "dense" in p:
+        y = y + apply_mlp(cfg, p["dense"], x).reshape(T, d)
+
+    y = y.reshape(B, S, d).astype(x.dtype)
+    return constrain(y, "batch", "seq", "embed"), aux
+
+
+def _moe_forward_local(cfg, p: dict, x: jax.Array, capacity_factor: float,
+                       shards: int):
+    """Per-data-shard dispatch: sort/capacity/scatter local, one EP all-to-all."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T, E, k = B * S, m.n_experts, m.top_k
+    assert T % shards == 0, (T, shards)
+    Tl = T // shards
+    xt = x.reshape(shards, Tl, d)
+    xt = constrain(xt, "batch", None, None)                    # leading dim = shards
+
+    # ---- routing (fp32, batched over shards) ----
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)            # [G, Tl, k]
+    gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(expert_idx, E, dtype=jnp.float32), axis=2),
+                  axis=(0, 1))
+    aux = E * jnp.sum(me * ce) * m.router_aux_weight
+    aux = aux + 1e-3 * jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+
+    # ---- per-shard sort-based dispatch (rows independent => no collectives) ----
+    C = expert_capacity(Tl, E, k, capacity_factor)
+    fe = expert_idx.reshape(shards, Tl * k)
+    ftok = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(Tl, dtype=jnp.int32), k)[None], (shards, Tl * k))
+    fgate = gate_vals.reshape(shards, Tl * k)
+    order = jnp.argsort(fe, axis=1, stable=True)
+    fe_s = jnp.take_along_axis(fe, order, axis=1)
+    ftok_s = jnp.take_along_axis(ftok, order, axis=1)
+    fg_s = jnp.take_along_axis(fgate, order, axis=1)
+    starts = jax.vmap(lambda row: jnp.searchsorted(
+        row, jnp.arange(E, dtype=row.dtype), side="left"))(fe_s)   # [G, E]
+    pos_in_e = (jnp.arange(Tl * k, dtype=jnp.int32)[None]
+                - jnp.take_along_axis(starts, fe_s, axis=1).astype(jnp.int32))
+    keep = pos_in_e < C
+    slot = jnp.where(keep, fe_s.astype(jnp.int32) * C + pos_in_e, E * C)
+
+    gathered = jnp.where(keep[..., None],
+                         jnp.take_along_axis(xt, ftok_s[..., None], axis=1), 0)
+    gidx = jnp.broadcast_to(jnp.arange(shards)[:, None], slot.shape)
+    buf = jnp.zeros((shards, E * C + 1, d), x.dtype).at[gidx, slot].add(
+        gathered.astype(x.dtype))
+    xg = buf[:, : E * C].reshape(shards, E, C, d)
+
+    # ---- EP all-to-all: data-major -> expert-major resharding ----
+    xe = jnp.swapaxes(xg, 0, 1).reshape(E, shards * C, d)
+    xe = constrain(xe, "experts", None, None)
+    out_e = _expert_gemms(cfg, p, xe)                          # [E, shards*C, d]
+    out = jnp.swapaxes(out_e.reshape(E, shards, C, d), 0, 1)   # [G, E, C, d]
+    out = constrain(out.reshape(shards, E * C, d), "batch", None, None)
+
+    # ---- per-shard combine ----
+    flat = jnp.pad(out, ((0, 0), (0, 1), (0, 0)))              # trash row at E*C
+    contrib = jnp.take_along_axis(flat, jnp.minimum(slot, E * C)[..., None], axis=1)
+    contrib = jnp.where(keep[..., None], contrib, 0)
+    contrib = contrib * fg_s[..., None].astype(contrib.dtype)   # bf16 combine (see above)
+    y = jnp.zeros((shards, Tl, d), x.dtype).at[gidx, ftok_s].add(contrib.astype(x.dtype))
+
+    if "shared" in p:
+        y = y + apply_mlp(cfg, p["shared"], x).reshape(shards, Tl, d)
+    if "dense" in p:
+        y = y + apply_mlp(cfg, p["dense"], x).reshape(shards, Tl, d)
+
+    y = y.reshape(B, S, d).astype(x.dtype)
+    return constrain(y, "batch", "seq", "embed"), aux

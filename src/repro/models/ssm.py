@@ -1,0 +1,303 @@
+"""State-space / recurrent sequence mixers: Mamba (Jamba), mLSTM + sLSTM (xLSTM).
+
+All three expose a full-sequence form (train / prefill, returns final state) and a
+single-step form (decode). States are pytrees so they slot into the same cache
+machinery as KV caches. The Mamba inner dim and mLSTM inner dim carry the 'ffn'
+logical axis (tensor-parallel over 'model' by default).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.kernels import ops, ref
+from repro.models.layers import (
+    ParamSpec, bias_spec, const_init, dense_spec, normal_init, ones_init, rms_norm,
+    zeros_init,
+)
+
+
+# ============================================================================ Mamba
+
+def mamba_dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    dt_rank = max(cfg.d_model // 16, 8)
+    return d_in, dt_rank, s.d_state, s.d_conv
+
+
+def mamba_specs(cfg, dtype, stack: Tuple[int, ...] = ()):
+    d = cfg.d_model
+    d_in, dtr, ds, cw = mamba_dims(cfg)
+    sa = ("layers",) * len(stack)
+
+    def a_init(key, shape, dt):
+        # S4D-real init: A_log = log(1..ds) per channel
+        base = jnp.log(jnp.arange(1, ds + 1, dtype=jnp.float32))
+        return jnp.broadcast_to(base, shape).astype(dt)
+
+    return {
+        "in_proj": dense_spec(d, 2 * d_in, ("embed", "ffn"), dtype, stack=stack),
+        "conv_w": ParamSpec((*stack, cw, d_in), dtype, (*sa, "conv", "ffn"),
+                            normal_init(1.0, fan_in_axis=len(stack))),
+        "conv_b": bias_spec(d_in, "ffn", dtype, stack=stack),
+        "x_proj": dense_spec(d_in, dtr + 2 * ds, ("ffn", None), dtype, stack=stack),
+        "dt_proj": dense_spec(dtr, d_in, (None, "ffn"), dtype, stack=stack),
+        "dt_bias": ParamSpec((*stack, d_in), jnp.float32, (*sa, "ffn"),
+                             const_init(math.log(math.expm1(0.01)))),
+        "a_log": ParamSpec((*stack, d_in, ds), jnp.float32, (*sa, "ffn", None), a_init),
+        "d_skip": ParamSpec((*stack, d_in), jnp.float32, (*sa, "ffn"), ones_init()),
+        "out_proj": dense_spec(d_in, d, ("ffn", "embed"), dtype, stack=stack),
+    }
+
+
+def _causal_depthwise_conv(x, w, b, history=None):
+    """x: [B,S,C]; w: [cw,C]; history: [B,cw-1,C] or None (zeros)."""
+    B, S, C = x.shape
+    cw = w.shape[0]
+    if history is None:
+        history = jnp.zeros((B, cw - 1, C), x.dtype)
+    xin = jnp.concatenate([history.astype(x.dtype), x], axis=1)        # [B, S+cw-1, C]
+    out = jax.lax.conv_general_dilated(
+        xin, w[:, None, :].astype(x.dtype),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=C)
+    new_history = xin[:, -(cw - 1):] if cw > 1 else history
+    return out + b.astype(x.dtype), new_history
+
+
+def mamba_forward(cfg, p: dict, x: jax.Array, state=None):
+    """x: [B,S,d] -> (y [B,S,d], (conv_state [B,cw-1,di], ssm_state [B,di,ds]))."""
+    d_in, dtr, ds, cw = mamba_dims(cfg)
+    conv_state, ssm_state = state if state is not None else (None, None)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = constrain(xi, "batch", "seq", "ffn")
+    xc, new_conv = _causal_depthwise_conv(xi, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+    proj = jnp.einsum("bse,ef->bsf", xc, p["x_proj"])
+    dt_r = proj[..., :dtr]
+    b_mat = proj[..., dtr:dtr + ds]
+    c_mat = proj[..., dtr + ds:]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt_r, p["dt_proj"]).astype(jnp.float32) + p["dt_bias"])
+    y, h_final = ops.selective_scan(xc, dt, p["a_log"], b_mat, c_mat, p["d_skip"],
+                                    h0=ssm_state)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return constrain(out, "batch", "seq", "embed"), (new_conv, h_final)
+
+
+def mamba_step(cfg, p: dict, x_t: jax.Array, state):
+    """x_t: [B,1,d]; state (conv [B,cw-1,di], ssm [B,di,ds]) -> (y [B,1,d], state')."""
+    d_in, dtr, ds, cw = mamba_dims(cfg)
+    conv_state, ssm_state = state
+    xz = jnp.einsum("bsd,de->bse", x_t, p["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)                                   # [B,1,di]
+    window = jnp.concatenate([conv_state.astype(xi.dtype), xi], axis=1)  # [B,cw,di]
+    xc = jnp.einsum("bwc,wc->bc", window, p["conv_w"].astype(xi.dtype)) + p["conv_b"]
+    xc = jax.nn.silu(xc)                                                # [B,di]
+    new_conv = window[:, 1:]
+    proj = jnp.einsum("be,ef->bf", xc, p["x_proj"])
+    dt_r, b_t, c_t = proj[:, :dtr], proj[:, dtr:dtr + ds], proj[:, dtr + ds:]
+    dt = jax.nn.softplus(
+        jnp.einsum("br,re->be", dt_r, p["dt_proj"]).astype(jnp.float32) + p["dt_bias"])
+    y, h_new = ref.mamba_step(xc, dt, p["a_log"], b_t, c_t, p["d_skip"], ssm_state)
+    y = y * jax.nn.silu(z[:, 0])
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"])[:, None]
+    return out, (new_conv, h_new)
+
+
+def mamba_state_specs(cfg, batch: int, stack: Tuple[int, ...] = ()):
+    d_in, _, ds, cw = mamba_dims(cfg)
+    sa = ("layers",) * len(stack)
+    return {
+        "conv": ParamSpec((*stack, batch, cw - 1, d_in), jnp.dtype(cfg.dtype),
+                          (*sa, "batch", None, "ffn"), lambda k, s, d: jnp.zeros(s, d)),
+        "ssm": ParamSpec((*stack, batch, d_in, ds), jnp.float32,
+                         (*sa, "batch", "ffn", None), lambda k, s, d: jnp.zeros(s, d)),
+    }
+
+
+# ============================================================================ mLSTM
+
+def mlstm_dims(cfg):
+    d = cfg.d_model
+    d_in = 2 * d           # pre-up-projection factor 2 (xLSTM)
+    H = cfg.n_heads
+    dk = d // H            # qk head dim
+    dv = d_in // H         # value head dim
+    return d_in, H, dk, dv
+
+
+def mlstm_specs(cfg, dtype, stack: Tuple[int, ...] = ()):
+    d = cfg.d_model
+    d_in, H, dk, dv = mlstm_dims(cfg)
+    cw = 4
+    sa = ("layers",) * len(stack)
+    return {
+        "w_up": dense_spec(d, d_in, ("embed", "ffn"), dtype, stack=stack),
+        "w_z": dense_spec(d, d_in, ("embed", "ffn"), dtype, stack=stack),
+        "conv_w": ParamSpec((*stack, cw, d_in), dtype, (*sa, "conv", "ffn"),
+                            normal_init(1.0, fan_in_axis=len(stack))),
+        "conv_b": bias_spec(d_in, "ffn", dtype, stack=stack),
+        "w_q": dense_spec(d_in, H * dk, ("ffn", "heads_flat"), dtype, stack=stack),
+        "w_k": dense_spec(d_in, H * dk, ("ffn", "heads_flat"), dtype, stack=stack),
+        "w_i": dense_spec(d_in, H, ("ffn", None), dtype, stack=stack),
+        "w_f": ParamSpec((*stack, d_in, H), dtype, (*sa, "ffn", None),
+                         normal_init(1.0, fan_in_axis=len(stack))),
+        "f_bias": ParamSpec((*stack, H), jnp.float32, (*sa, None), const_init(3.0)),
+        "hn_scale": ParamSpec((*stack, d_in), dtype, (*sa, "ffn"), ones_init()),
+        "w_down": dense_spec(d_in, d, ("ffn", "embed"), dtype, stack=stack),
+    }
+
+
+def _mlstm_qkvif(cfg, p, x):
+    d_in, H, dk, dv = mlstm_dims(cfg)
+    B, S, _ = x.shape
+    xi = jnp.einsum("bsd,de->bse", x, p["w_up"])
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"])
+    xi = constrain(xi, "batch", "seq", "ffn")
+    return xi, z
+
+
+def mlstm_forward(cfg, p: dict, x: jax.Array, state=None):
+    """x: [B,S,d] -> (y, (C, n, m, conv_hist))."""
+    d_in, H, dk, dv = mlstm_dims(cfg)
+    B, S, _ = x.shape
+    xi, z = _mlstm_qkvif(cfg, p, x)
+    conv_hist = state[3] if state is not None else None
+    xc, new_conv = _causal_depthwise_conv(xi, p["conv_w"], p["conv_b"], conv_hist)
+    xc = jax.nn.silu(xc)
+    q = jnp.einsum("bse,eh->bsh", xc, p["w_q"]).reshape(B, S, H, dk)
+    k = jnp.einsum("bse,eh->bsh", xc, p["w_k"]).reshape(B, S, H, dk)
+    v = xi.reshape(B, S, H, dv)
+    i_raw = jnp.einsum("bse,eh->bsh", xc, p["w_i"])
+    f_raw = jnp.einsum("bse,eh->bsh", xc, p["w_f"]).astype(jnp.float32) + p["f_bias"]
+    core_state = None if state is None else tuple(state[:3])
+    h, (C, n, m) = ops.mlstm(q, k, v, i_raw, f_raw, state=core_state)
+    h = h.reshape(B, S, d_in)
+    h = rms_norm(h, p["hn_scale"]) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", h, p["w_down"])
+    return constrain(out, "batch", "seq", "embed"), (C, n, m, new_conv)
+
+
+def mlstm_decode_step(cfg, p: dict, x_t: jax.Array, state):
+    """x_t: [B,1,d]; state (C, n, m, conv_hist) -> (y [B,1,d], state')."""
+    d_in, H, dk, dv = mlstm_dims(cfg)
+    B = x_t.shape[0]
+    xi, z = _mlstm_qkvif(cfg, p, x_t)                                  # [B,1,d_in]
+    C0, n0, m0, conv_hist = state
+    window = jnp.concatenate([conv_hist.astype(xi.dtype), xi], axis=1)
+    xc = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", window, p["conv_w"].astype(xi.dtype)) + p["conv_b"])
+    new_conv = window[:, 1:]
+    q = jnp.einsum("be,eh->bh", xc, p["w_q"]).reshape(B, H, dk)
+    k = jnp.einsum("be,eh->bh", xc, p["w_k"]).reshape(B, H, dk)
+    v = xi[:, 0].reshape(B, H, dv)
+    i_raw = jnp.einsum("be,eh->bh", xc, p["w_i"])
+    f_raw = jnp.einsum("be,eh->bh", xc, p["w_f"]).astype(jnp.float32) + p["f_bias"]
+    h, (C, n, m) = ref.mlstm_step(q, k, v, i_raw, f_raw, (C0, n0, m0))
+    h = h.reshape(B, d_in)
+    h = rms_norm(h, p["hn_scale"]) * jax.nn.silu(z[:, 0])
+    out = jnp.einsum("be,ed->bd", h, p["w_down"])[:, None]
+    return out, (C, n, m, new_conv)
+
+
+def mlstm_state_specs(cfg, batch: int, stack: Tuple[int, ...] = ()):
+    d_in, H, dk, dv = mlstm_dims(cfg)
+    sa = ("layers",) * len(stack)
+    z = lambda k, s, d: jnp.zeros(s, d)
+    return {
+        "C": ParamSpec((*stack, batch, H, dk, dv), jnp.float32,
+                       (*sa, "batch", "heads", "state", None), z),
+        "n": ParamSpec((*stack, batch, H, dk), jnp.float32, (*sa, "batch", "heads", "state"), z),
+        "m": ParamSpec((*stack, batch, H), jnp.float32, (*sa, "batch", "heads"),
+                       lambda k, s, d: jnp.full(s, ref.NEG_INF, d)),
+        "conv": ParamSpec((*stack, batch, 3, d_in), jnp.dtype(cfg.dtype),
+                          (*sa, "batch", None, "ffn"), z),
+    }
+
+
+# ============================================================================ sLSTM
+
+def slstm_specs(cfg, dtype, stack: Tuple[int, ...] = ()):
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    sa = ("layers",) * len(stack)
+    return {
+        "w_in": dense_spec(d, 4 * d, ("embed", "ffn"), dtype, stack=stack),
+        "b_in": ParamSpec((*stack, 4 * d), jnp.float32, (*sa, None), zeros_init()),
+        "r": ParamSpec((*stack, H, dh, 4 * dh), dtype, (*sa, "heads", None, None),
+                       normal_init(1.0, fan_in_axis=len(stack) + 1)),
+        "hn_scale": ParamSpec((*stack, d), dtype, (*sa, None), ones_init()),
+        "w_out": dense_spec(d, d, ("embed", "embed"), dtype, stack=stack),
+    }
+
+
+def _slstm_cell(cfg, p, g_t, carry):
+    """One sLSTM step. g_t: [B,4d] input gates pre-activation; carry (c,n,h,m): [B,d]."""
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    c, n, h, m = carry
+    B = g_t.shape[0]
+    rec = jnp.einsum("bhd,hdf->bhf", h.reshape(B, H, dh).astype(p["r"].dtype), p["r"])
+    g = g_t.astype(jnp.float32) + rec.reshape(B, 4 * d).astype(jnp.float32) + p["b_in"]
+    zt, it, ft, ot = jnp.split(g, 4, axis=-1)
+    zv = jnp.tanh(zt)
+    log_f = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(log_f + m, it)
+    i = jnp.exp(it - m_new)
+    f = jnp.exp(log_f + m - m_new)
+    c_new = f * c + i * zv
+    n_new = jnp.maximum(f * n + i, 1e-6)
+    h_new = jax.nn.sigmoid(ot) * (c_new / n_new)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_forward(cfg, p: dict, x: jax.Array, state=None):
+    """x: [B,S,d] -> (y, (c,n,h,m)). Sequential scan (sLSTM is not parallelizable)."""
+    B, S, d = x.shape
+    if state is None:
+        z = jnp.zeros((B, d), jnp.float32)
+        state = (z, z, z, jnp.full((B, d), ref.NEG_INF, jnp.float32))
+    gates = jnp.einsum("bsd,df->bsf", x, p["w_in"])                    # [B,S,4d]
+
+    def step(carry, g_t):
+        new = _slstm_cell(cfg, p, g_t, carry)
+        return new, new[2]
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(gates, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1)                                          # [B,S,d]
+    h = rms_norm(h.astype(x.dtype), p["hn_scale"])
+    out = jnp.einsum("bsd,de->bse", h, p["w_out"])
+    return constrain(out, "batch", "seq", "embed"), state
+
+
+def slstm_step(cfg, p: dict, x_t: jax.Array, state):
+    """x_t: [B,1,d] -> (y [B,1,d], state')."""
+    g_t = jnp.einsum("bd,df->bf", x_t[:, 0], p["w_in"])
+    new = _slstm_cell(cfg, p, g_t, state)
+    h = rms_norm(new[2].astype(x_t.dtype), p["hn_scale"])
+    out = jnp.einsum("bd,de->be", h, p["w_out"])[:, None]
+    return out, new
+
+
+def slstm_state_specs(cfg, batch: int, stack: Tuple[int, ...] = ()):
+    d = cfg.d_model
+    sa = ("layers",) * len(stack)
+    z = lambda k, s, dt: jnp.zeros(s, dt)
+    return {
+        "c": ParamSpec((*stack, batch, d), jnp.float32, (*sa, "batch", "embed"), z),
+        "n": ParamSpec((*stack, batch, d), jnp.float32, (*sa, "batch", "embed"), z),
+        "h": ParamSpec((*stack, batch, d), jnp.float32, (*sa, "batch", "embed"), z),
+        "m": ParamSpec((*stack, batch, d), jnp.float32, (*sa, "batch", "embed"),
+                       lambda k, s, dt: jnp.full(s, ref.NEG_INF, dt)),
+    }

@@ -1,0 +1,154 @@
+"""AdamW with cosine schedule, global-norm clipping, and quantized moment states.
+
+``state_dtype`` options:
+  * ``float32``  — standard.
+  * ``bfloat16`` — halves optimizer memory; fine at these scales.
+  * ``int8``     — 8-bit blockwise-quantized moments (Dettmers-style): m and v are
+    stored as int8 with one fp32 scale per row (last axis), dequantized for the
+    update and requantized after. This is what lets the 1T-param Kimi cell fit a
+    512-chip pod in the dry-run (see EXPERIMENTS.md §Dry-run).
+
+The optimizer is pure-functional: ``init`` -> state pytree; ``update`` -> (params,
+state, stats). State specs (for pjit shardings) mirror the parameter logical axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                    end_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (end_frac + (1 - end_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 1000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"      # float32 | bfloat16 | int8
+
+
+# ------------------------------------------------------------- int8 moment codec
+
+def _q8_encode(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Blockwise (per-last-axis-row) symmetric int8."""
+    xf = x.astype(jnp.float32)
+    if x.ndim == 0:
+        scale = jnp.maximum(jnp.abs(xf), 1e-30) / 127.0
+        return jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8), scale
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _q8_decode(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+class AdamW:
+    def __init__(self, cfg: AdamWConfig) -> None:
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------- state
+    def _moment_init(self, leaf):
+        if self.cfg.state_dtype == "int8":
+            q, s = _q8_encode(jnp.zeros(leaf.shape, jnp.float32))
+            return {"q": q, "scale": s}
+        return jnp.zeros(leaf.shape, jnp.dtype(self.cfg.state_dtype))
+
+    def init(self, params) -> Dict:
+        return {
+            "m": jax.tree.map(self._moment_init, params),
+            "v": jax.tree.map(self._moment_init, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def state_specs(self, param_specs) -> Dict:
+        """ParamSpec tree for the optimizer state (mirrors parameter axes)."""
+        is_spec = lambda s: isinstance(s, ParamSpec)
+
+        def mom(spec: ParamSpec):
+            if self.cfg.state_dtype == "int8":
+                scale_shape = (*spec.shape[:-1], 1) if spec.shape else ()
+                return {
+                    "q": ParamSpec(spec.shape, jnp.int8, spec.axes,
+                                   lambda k, s, d: jnp.zeros(s, d)),
+                    "scale": ParamSpec(scale_shape, jnp.float32, spec.axes if spec.shape else (),
+                                       lambda k, s, d: jnp.full(s, 1e-30 / 127.0, d)),
+                }
+            dt = jnp.dtype(self.cfg.state_dtype)
+            return ParamSpec(spec.shape, dt, spec.axes, lambda k, s, d: jnp.zeros(s, d))
+
+        return {
+            "m": jax.tree.map(mom, param_specs, is_leaf=is_spec),
+            "v": jax.tree.map(mom, param_specs, is_leaf=is_spec),
+            "step": ParamSpec((), jnp.int32, (), lambda k, s, d: jnp.zeros(s, d)),
+        }
+
+    # ------------------------------------------------------------------ update
+    def _decode(self, mom):
+        if self.cfg.state_dtype == "int8":
+            return _q8_decode(mom["q"], mom["scale"])
+        return mom.astype(jnp.float32)
+
+    def _encode(self, x):
+        if self.cfg.state_dtype == "int8":
+            q, s = _q8_encode(x)
+            return {"q": q, "scale": s}
+        return x.astype(jnp.dtype(self.cfg.state_dtype))
+
+    def update(self, grads, state, params) -> Tuple[Any, Dict, Dict]:
+        cfg = self.cfg
+        step = state["step"] + 1
+        lr = cosine_schedule(step, peak_lr=cfg.peak_lr, warmup=cfg.warmup,
+                             total=cfg.total_steps)
+
+        # global-norm clip (fp32)
+        gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(gf)))
+        clip = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+        gf = jax.tree.map(lambda g: g * clip, gf)
+
+        b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+        is_mom_leaf = lambda x: isinstance(x, dict) and set(x) == {"q", "scale"}
+
+        def upd(g, m_enc, v_enc, p):
+            m = cfg.b1 * self._decode(m_enc) + (1 - cfg.b1) * g
+            v = cfg.b2 * self._decode(v_enc) + (1 - cfg.b2) * jnp.square(g)
+            mhat = m / b1c
+            vhat = v / b2c
+            delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            # decoupled weight decay on matrix-like params only
+            if p.ndim >= 2:
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return new_p, self._encode(m), self._encode(v)
+
+        flat_g, tdef = jax.tree.flatten(gf)
+        flat_m = jax.tree.leaves(state["m"], is_leaf=is_mom_leaf)
+        flat_v = jax.tree.leaves(state["v"], is_leaf=is_mom_leaf)
+        flat_p = jax.tree.leaves(params)
+        outs = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_params = jax.tree.unflatten(tdef, [o[0] for o in outs])
+        new_m = jax.tree.unflatten(tdef, [o[1] for o in outs])
+        new_v = jax.tree.unflatten(tdef, [o[2] for o in outs])
+        stats = {"lr": lr, "grad_norm": gnorm, "clip": clip}
+        return new_params, {"m": new_m, "v": new_v, "step": step}, stats

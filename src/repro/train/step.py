@@ -1,0 +1,62 @@
+"""Train-step builder: loss -> grads (optionally microbatched) -> AdamW update.
+
+One function builds the step for every context: single-device CPU smoke tests, the
+pjit'd 512-device dry-run, and the fault-tolerant trainer. Gradient accumulation is
+a ``lax.scan`` over microbatches (bounding activation memory — the standard lever
+against the memory roofline term), and the same step is what ``launch/dryrun.py``
+lowers for the roofline analysis so what we analyze is what we run.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamW
+from repro.util import rscan
+
+
+def make_train_step(model, opt: AdamW, *, grad_accum: int = 1) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def compute_grads(params, batch):
+        if grad_accum <= 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+            return grads, metrics
+
+        # split every batch leaf along batch axis 0 into [A, B/A, ...]
+        def split(x):
+            assert x.shape[0] % grad_accum == 0, (x.shape, grad_accum)
+            return x.reshape(grad_accum, x.shape[0] // grad_accum, *x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def body(carry, mb):
+            acc, metrics_acc = carry
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mb)
+            acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), acc, grads)
+            metrics_acc = jax.tree.map(lambda a, m: a + m / grad_accum,
+                                       metrics_acc, metrics)
+            return (acc, metrics_acc), None
+
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        zero_m = {"loss": 0.0, "ce": 0.0, "aux": 0.0, "zloss": 0.0}
+        zero_m = jax.tree.map(jnp.float32, zero_m)
+        (grads, metrics), _ = rscan(body, (zero_g, zero_m), micro)
+        grads = jax.tree.map(lambda g: g / grad_accum, grads)
+        return grads, metrics
+
+    def train_step(params, opt_state, batch):
+        grads, metrics = compute_grads(params, batch)
+        params, opt_state, stats = opt.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics.update(stats)
+        return params, opt_state, metrics
+
+    return train_step

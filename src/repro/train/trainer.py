@@ -1,0 +1,144 @@
+"""Fault-tolerant training loop: checkpoint/restart, elastic re-mesh, straggler log.
+
+Restart contract: state = (params, opt_state, step); the data pipeline is a pure
+function of step, so resume is bit-exact. Elastic contract: the checkpoint is
+layout-free (host numpy), so the same run can resume on a different mesh / device
+count — restore simply device_puts with the new shardings (tested with different
+``xla_force_host_platform_device_count`` values in tests/test_elastic.py).
+
+Straggler mitigation at the trainer level is detection + accounting (per-step wall
+time vs a robust EWMA envelope); on a real fleet the signal feeds the cluster
+manager that drains the slow host — here it feeds ``Trainer.straggler_events`` and
+the logs, and the serving-side twin (dispatcher hedging) is live in repro.core.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ArchConfig
+from repro.data import SyntheticTokenPipeline
+from repro.dist.sharding import Rules, abstract_state, param_shardings, use_rules
+from repro.models import build_model
+from repro.optim import AdamW, AdamWConfig
+from repro.train.step import make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    seq_len: int = 128
+    global_batch: int = 8
+    steps: int = 100
+    ckpt_every: int = 25
+    ckpt_keep: int = 3
+    ckpt_async: bool = True
+    grad_accum: int = 1
+    log_every: int = 10
+    seed: int = 0
+    straggler_factor: float = 3.0     # step slower than factor x EWMA => event
+
+
+class Trainer:
+    def __init__(self, arch_cfg: ArchConfig, tcfg: TrainerConfig,
+                 opt_cfg: Optional[AdamWConfig] = None,
+                 ckpt_dir: Optional[str] = None,
+                 mesh=None, rules: Optional[Rules] = None,
+                 log: Callable[[str], None] = print) -> None:
+        self.cfg = arch_cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.rules = rules
+        self.log = log
+        self.model = build_model(arch_cfg, max_seq=tcfg.seq_len)
+        self.opt = AdamW(opt_cfg or AdamWConfig(total_steps=tcfg.steps))
+        self.data = SyntheticTokenPipeline(
+            vocab_size=arch_cfg.vocab_size, seq_len=tcfg.seq_len,
+            global_batch=tcfg.global_batch, seed=tcfg.seed)
+        self.ckpt = CheckpointManager(ckpt_dir, keep=tcfg.ckpt_keep) if ckpt_dir else None
+        self.history: List[Dict] = []
+        self.straggler_events: List[Dict] = []
+        self._build_step()
+
+    # ------------------------------------------------------------------- build
+    def _build_step(self) -> None:
+        raw_step = make_train_step(self.model, self.opt, grad_accum=self.tcfg.grad_accum)
+        if self.mesh is None:
+            self._step = jax.jit(raw_step, donate_argnums=(0, 1))
+            self._param_sh = self._opt_sh = None
+            return
+        specs = self.model.param_specs()
+        self._param_sh = param_shardings(specs, self.rules, self.mesh)
+        self._opt_sh = param_shardings(self.opt.state_specs(specs), self.rules, self.mesh)
+
+        def sharded_step(params, opt_state, batch):
+            with use_rules(self.rules, self.mesh):
+                return raw_step(params, opt_state, batch)
+
+        self._step = jax.jit(
+            sharded_step,
+            in_shardings=(self._param_sh, self._opt_sh, None),
+            out_shardings=(self._param_sh, self._opt_sh, None),
+            donate_argnums=(0, 1),
+        )
+
+    # -------------------------------------------------------------------- init
+    def init_state(self):
+        with use_rules(self.rules, self.mesh):
+            params = self.model.init(jax.random.PRNGKey(self.tcfg.seed))
+            opt_state = self.opt.init(params)
+        if self._param_sh is not None:
+            params = jax.device_put(params, self._param_sh)
+            opt_state = jax.device_put(opt_state, self._opt_sh)
+        return params, opt_state
+
+    def resume_or_init(self):
+        if self.ckpt is not None:
+            restored, step = self.ckpt.restore_latest_or_none()
+            if restored is not None:
+                params = restored["params"]
+                opt_state = restored["opt_state"]
+                if self._param_sh is not None:     # elastic re-mesh on restore
+                    params = jax.device_put(params, self._param_sh)
+                    opt_state = jax.device_put(opt_state, self._opt_sh)
+                self.log(f"[trainer] resumed from step {step}")
+                return params, opt_state, int(step)
+        return (*self.init_state(), 0)
+
+    # --------------------------------------------------------------------- run
+    def run(self, steps: Optional[int] = None) -> Dict:
+        steps = steps or self.tcfg.steps
+        params, opt_state, start = self.resume_or_init()
+        ewma: Optional[float] = None
+        for step in range(start, steps):
+            batch = self.data.batch_dict(step)
+            t0 = time.perf_counter()
+            params, opt_state, metrics = self._step(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            # straggler envelope (ignore compile-step outlier at `start`)
+            if step > start + 1:
+                if ewma is not None and dt > self.tcfg.straggler_factor * ewma:
+                    self.straggler_events.append({"step": step, "dt": dt, "ewma": ewma})
+                    self.log(f"[trainer] straggler step {step}: {dt*1e3:.0f}ms "
+                             f"vs envelope {ewma*1e3:.0f}ms")
+                ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+            self.history.append({"step": step, "loss": loss, "dt": dt})
+            if step % self.tcfg.log_every == 0:
+                self.log(f"[trainer] step {step:5d} loss {loss:.4f} "
+                         f"({dt*1e3:.0f} ms)")
+            if self.ckpt is not None and (step + 1) % self.tcfg.ckpt_every == 0:
+                self.ckpt.save(step + 1,
+                               {"params": params, "opt_state": opt_state},
+                               blocking=not self.tcfg.ckpt_async)
+        if self.ckpt is not None:
+            self.ckpt.wait()
+            self.ckpt.save(steps, {"params": params, "opt_state": opt_state},
+                           blocking=True)
+        return {"params": params, "opt_state": opt_state,
+                "final_loss": self.history[-1]["loss"] if self.history else None}

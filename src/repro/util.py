@@ -1,0 +1,53 @@
+"""Probe-mode plumbing for cost extraction.
+
+XLA's ``cost_analysis`` counts a while-loop body ONCE, not x trip-count, so a
+scanned-over-layers model reports ~L x too few FLOPs/bytes and hides in-loop
+collectives. The dry-run therefore lowers small *probe* variants of each cell with
+every internal scan UNROLLED (1-2 layers / periods, coarse attention blocks) and
+extrapolates per-layer costs linearly (see launch/costmodel.py).
+
+``rscan`` is used at every scan site in the model/step code: a normal ``lax.scan``
+in production, fully unrolled inside ``probe_mode()``. Time-sequential scans that
+must never unroll (sLSTM over 32k steps) keep calling ``jax.lax.scan`` directly.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+
+class _State(threading.local):
+    def __init__(self):
+        self.probe = False
+
+
+_STATE = _State()
+
+
+@contextlib.contextmanager
+def probe_mode():
+    prev = _STATE.probe
+    _STATE.probe = True
+    try:
+        yield
+    finally:
+        _STATE.probe = prev
+
+
+def in_probe_mode() -> bool:
+    return _STATE.probe
+
+
+def rscan(body, init, xs, length=None):
+    """lax.scan that fully unrolls in probe mode (so HLO cost sees every layer)."""
+    return jax.lax.scan(body, init, xs, length=length,
+                        unroll=True if _STATE.probe else 1)
+
+
+def probe_block(block: int, seq: int, target_iters: int = 4) -> int:
+    """Coarsen a chunk size in probe mode so unrolled loops stay small."""
+    if not _STATE.probe:
+        return block
+    return max(block, -(-seq // target_iters))

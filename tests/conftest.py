@@ -1,0 +1,34 @@
+import os
+import sys
+
+os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "3")   # silence XLA AOT-loader notices
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def reduced_f32(arch: str):
+    """Reduced config in float32 (tight numeric tests)."""
+    from repro.configs import get_config
+    return dataclasses.replace(get_config(arch).reduced(), dtype="float32")
+
+
+@pytest.fixture(scope="session")
+def gateway():
+    """One shared cold-mode platform with a tiny deployed function."""
+    from repro.core import FunctionSpec, Gateway
+    gw = Gateway(n_hosts=2, slots_per_host=2, mode="cold", hedging=False)
+    spec = FunctionSpec(arch="llama3.2-3b", batch_size=2, prompt_len=16,
+                        decode_steps=2)
+    gw.deploy(spec)
+    yield gw, spec
+    gw.shutdown()

@@ -1,0 +1,69 @@
+"""Config registry: 10 archs, 40 cells, param-count model matches real init."""
+import jax
+import pytest
+
+from repro.configs import all_cells, get_config, list_archs
+from repro.models import build_model
+
+EXPECTED_ARCHS = {
+    "starcoder2-3b", "llama3.2-3b", "olmo-1b", "qwen2.5-32b", "whisper-medium",
+    "kimi-k2-1t-a32b", "arctic-480b", "xlstm-1.3b", "jamba-1.5-large-398b",
+    "qwen2-vl-2b",
+}
+
+
+def test_all_archs_registered():
+    assert set(list_archs()) == EXPECTED_ARCHS
+
+
+def test_cell_count_is_40():
+    runnable = all_cells()
+    skipped = sum(len(get_config(a).skipped_shapes()) for a in list_archs())
+    assert len(runnable) == 32
+    assert len(runnable) + skipped == 40
+
+
+def test_long_context_applicability():
+    for arch in list_archs():
+        cfg = get_config(arch)
+        has_long = "long_500k" in cfg.shape_names()
+        assert has_long == (cfg.family in ("ssm", "hybrid")), arch
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED_ARCHS))
+def test_nameplate_param_counts(arch):
+    """Analytic totals must land near the published model sizes."""
+    nameplates = {
+        "starcoder2-3b": 3.0e9, "llama3.2-3b": 3.2e9, "olmo-1b": 1.2e9,
+        "qwen2.5-32b": 32.8e9, "whisper-medium": 0.76e9,
+        "kimi-k2-1t-a32b": 1.03e12, "arctic-480b": 0.48e12,
+        "xlstm-1.3b": 1.7e9, "jamba-1.5-large-398b": 398e9, "qwen2-vl-2b": 1.5e9,
+    }
+    total = get_config(arch).param_counts()["total"]
+    assert abs(total - nameplates[arch]) / nameplates[arch] < 0.25, total
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED_ARCHS))
+def test_param_count_model_matches_init(arch):
+    """param_counts() (drives MODEL_FLOPS) must track the real init within 15%."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg, max_seq=32)
+    from repro.models.layers import count_params
+    real = count_params(model.param_specs())
+    est = cfg.param_counts()["total"]
+    assert abs(real - est) / real < 0.15, (real, est)
+
+
+def test_fingerprint_stability_and_sensitivity():
+    import dataclasses
+    a = get_config("olmo-1b")
+    assert a.fingerprint() == get_config("olmo-1b").fingerprint()
+    b = dataclasses.replace(a, n_layers=a.n_layers + 1)
+    assert a.fingerprint() != b.fingerprint()
+
+
+def test_reduced_configs_are_small():
+    for arch in list_archs():
+        r = get_config(arch).reduced()
+        assert r.d_model <= 256 and r.vocab_size <= 1024
+        assert r.param_counts()["total"] < 20e6

@@ -1,0 +1,99 @@
+"""Sharding rules: shape-aware axis assignment + property tests (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import Rules, constrain, make_rules, preset_names, use_rules
+
+
+def fake_rules(sizes, preset_mapping):
+    return Rules("test", preset_mapping, tuple(sizes), dict(sizes))
+
+
+MESH_SIZES = {"pod": 2, "data": 16, "model": 16}
+
+
+def test_divisible_axis_assigned():
+    r = fake_rules(MESH_SIZES, {"vocab": "model"})
+    assert r.spec(("vocab",), (152064,)) == P("model")
+
+
+def test_non_divisible_axis_dropped():
+    r = fake_rules(MESH_SIZES, {"kv_heads": "model"})
+    assert r.spec(("kv_heads",), (2,)) == P(None)
+
+
+def test_fallthrough_to_head_dim():
+    r = fake_rules(MESH_SIZES, {"kv_heads": "model", "head_dim": "model"})
+    # kv_heads=2 can't take model=16 -> head_dim picks it up
+    assert r.spec(("kv_heads", "head_dim"), (2, 128)) == P(None, "model")
+    # kv_heads=16 takes it; head_dim then must not reuse the axis
+    assert r.spec(("kv_heads", "head_dim"), (16, 128)) == P("model", None)
+
+
+def test_tuple_target_prefix():
+    r = fake_rules(MESH_SIZES, {"batch": ("pod", "data")})
+    assert r.spec(("batch",), (256,)) == P(("pod", "data"))
+    assert r.spec(("batch",), (2,)) == P("pod")        # only pod=2 divides
+    assert r.spec(("batch",), (1,)) == P(None)
+
+
+def test_pod_dropped_on_single_pod_mesh():
+    r = fake_rules({"data": 16, "model": 16}, {"batch": ("pod", "data")})
+    assert r.spec(("batch",), (256,)) == P("data")
+
+
+def test_constrain_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    assert constrain(x, "batch", "embed") is x
+
+
+def test_all_presets_resolve():
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    for preset in preset_names():
+        r = make_rules(preset, mesh)
+        assert r.spec(("batch", "embed"), (8, 128)) is not None
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    dim=st.integers(min_value=1, max_value=4096),
+    axes=st.sampled_from(["batch", "embed", "ffn", "vocab", "kv_heads",
+                          "experts", "heads"]),
+)
+def test_property_spec_always_divides(dim, axes):
+    """Whatever the shape, the assigned mesh-axis product must divide the dim."""
+    mapping = {
+        "batch": ("pod", "data"), "embed": "data", "ffn": "model",
+        "vocab": "model", "kv_heads": "model", "experts": "model",
+        "heads": "model",
+    }
+    r = fake_rules(MESH_SIZES, mapping)
+    spec = r.spec((axes,), (dim,))
+    part = spec[0]
+    if part is None:
+        return
+    names = (part,) if isinstance(part, str) else part
+    prod = 1
+    for n in names:
+        prod *= MESH_SIZES[n]
+    assert dim % prod == 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=64), min_size=1, max_size=4))
+def test_property_no_mesh_axis_used_twice(dims):
+    mapping = {"a": "model", "b": "model", "c": ("data", "model"), "d": "data"}
+    r = fake_rules(MESH_SIZES, mapping)
+    axes = ["a", "b", "c", "d"][: len(dims)]
+    spec = r.spec(tuple(axes), tuple(d * 16 * 32 for d in dims))  # all divisible
+    seen = []
+    for part in spec:
+        if part is None:
+            continue
+        seen.extend([part] if isinstance(part, str) else list(part))
+    assert len(seen) == len(set(seen)), spec
