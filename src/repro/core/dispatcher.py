@@ -14,7 +14,7 @@ routing is just least-loaded. What remains is what any large fleet needs:
 from __future__ import annotations
 
 import threading
-from concurrent.futures import Future
+from concurrent.futures import Future, InvalidStateError
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -46,6 +46,17 @@ class _LatencyModel:
             if not buf or len(buf) < 8:
                 return None
             return float(np.percentile(buf, 95))
+
+
+def _settle(result: Future, value=None, error: Optional[BaseException] = None) -> None:
+    """Complete ``result`` unless a concurrent attempt (hedge / retry) won."""
+    try:
+        if error is not None:
+            result.set_exception(error)
+        else:
+            result.set_result(value)
+    except InvalidStateError:
+        pass
 
 
 def _is_transient(err: BaseException) -> bool:
@@ -87,8 +98,7 @@ class Dispatcher:
         try:
             host = self.cluster.pick_host(exclude=tried)
         except HostFailure as e:
-            if not result.done():
-                result.set_exception(e)
+            _settle(result, error=e)
             return
         tried = tried | {host.host_id}
 
@@ -104,11 +114,7 @@ class Dispatcher:
                 return
             err = f.exception()
             if err is None:
-                if not result.done():
-                    try:
-                        result.set_result(f.result())
-                    except Exception:
-                        pass
+                _settle(result, value=f.result())
                 return
             retryable = isinstance(err, HostFailure) or _is_transient(err)
             if retryable and n_try < self.max_retries:
@@ -117,8 +123,8 @@ class Dispatcher:
                 fresh = Timeline(t_enqueue=tl.t_enqueue)
                 self._attempt(result, dep, tokens, driver_name, fresh, tried,
                               n_try + 1, label, allow_hedge)
-            elif not result.done():
-                result.set_exception(err)
+            else:
+                _settle(result, error=err)
 
         fut.add_done_callback(on_done)
 
@@ -126,19 +132,14 @@ class Dispatcher:
         p95 = self.latency.p95(key)
         if allow_hedge and p95 is not None and len(self.cluster.alive_hosts()) > 1:
             deadline = self.hedge_factor * p95
+            settled = threading.Event()           # fires on attempt OR request end
+            fut.add_done_callback(lambda _f: settled.set())
+            result.add_done_callback(lambda _f: settled.set())
 
             def hedge_watch():
-                fut_done = fut.done()
-                if not fut_done:
-                    try:
-                        fut.result(timeout=deadline)
-                        return
-                    except HostFailure:
-                        return      # retry path handles it
-                    except Exception:
-                        pass        # timeout or other -> hedge
+                settled.wait(deadline)
                 if result.done() or fut.done():
-                    return
+                    return          # finished / failed (retry path owns failures)
                 with self._lock:
                     self.hedges_launched += 1
                 fresh = Timeline(t_enqueue=tl.t_enqueue)

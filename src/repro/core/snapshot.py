@@ -28,6 +28,8 @@ import jax
 import ml_dtypes
 import numpy as np
 
+from repro.dist import compat  # noqa: F401  (jax.tree.flatten_with_path shim)
+
 
 def _flatten_with_paths(tree) -> Tuple[List[Tuple[str, Any]], Any]:
     flat, treedef = jax.tree.flatten_with_path(tree)
@@ -46,10 +48,16 @@ def _resolve_dtype(name: str) -> np.dtype:
 
 
 def _is_native(dt: np.dtype) -> bool:
-    """True if np.save/np.load round-trips this dtype faithfully."""
+    """True if np.save/np.load round-trips this dtype faithfully.
+
+    ``np.dtype(str(dt))`` is not the right probe: ml_dtypes registers its type
+    names with numpy, so that round-trips even though the .npy *format* header
+    degrades bf16/fp8 to void (or rejects them outright).  Probe the actual
+    header descr round-trip instead."""
     try:
-        return np.dtype(str(dt)) == dt
-    except TypeError:
+        from numpy.lib import format as npy_format
+        return npy_format.descr_to_dtype(npy_format.dtype_to_descr(dt)) == dt
+    except (TypeError, ValueError):
         return False
 
 

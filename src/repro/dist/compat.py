@@ -1,0 +1,89 @@
+"""jax API compatibility shims.
+
+The repo targets the modern jax surface (``jax.shard_map``,
+``jax.sharding.AxisType``, ``jax.make_mesh(..., axis_types=...)``); the pinned
+container jaxlib predates parts of it.  Importing this module back-fills the
+missing attributes from their ``jax.experimental`` ancestors so callers (and
+the tests) can use one spelling everywhere.  Everything here is a no-op on a
+jax that already provides the modern names.
+"""
+from __future__ import annotations
+
+import enum
+import inspect
+
+import jax
+
+
+def _ensure_axis_type() -> None:
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+def _ensure_make_mesh_axis_types() -> None:
+    try:
+        params = inspect.signature(jax.make_mesh).parameters
+    except (TypeError, ValueError):
+        return
+    if "axis_types" in params:
+        return
+    orig = jax.make_mesh
+
+    def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+        del axis_types  # older jax: all mesh axes behave as Auto
+        return orig(axis_shapes, axis_names, devices=devices)
+
+    jax.make_mesh = make_mesh
+
+
+def _ensure_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, mesh=None, in_specs=None, out_specs=None, **kwargs):
+        kwargs.setdefault("check_rep", False)
+        return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                          **kwargs)
+
+    jax.shard_map = shard_map
+
+
+def _ensure_tree_with_path() -> None:
+    if not hasattr(jax.tree, "flatten_with_path"):
+        jax.tree.flatten_with_path = jax.tree_util.tree_flatten_with_path
+    if not hasattr(jax.tree, "map_with_path"):
+        jax.tree.map_with_path = jax.tree_util.tree_map_with_path
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` returns a per-program list on older jax
+    and a flat dict on newer; normalize to a dict (empty when unavailable)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """Version-portable shard_map with replication checking disabled (psum /
+    pmax replication tracking differs across jax versions)."""
+    try:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    except TypeError:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=False)
+
+
+_ensure_axis_type()
+_ensure_make_mesh_axis_types()
+_ensure_shard_map()
+_ensure_tree_with_path()

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 
 from repro.configs import SHAPES, get_config, list_archs
 from repro.configs.base import ArchConfig, ShapeSpec
+from repro.dist import compat
 from repro.dist.sharding import (
     Rules, abstract_state, make_rules, param_shardings, use_rules,
 )
@@ -222,7 +223,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             record["memory"]["argument_size_in_bytes"]
             + record["memory"]["temp_size_in_bytes"]
             - record["memory"]["alias_size_in_bytes"])
-        ca = compiled.cost_analysis() or {}
+        ca = compat.cost_analysis(compiled)
         record["flops_per_device"] = float(ca.get("flops", 0.0))
         record["bytes_accessed_per_device"] = float(ca.get("bytes accessed", 0.0))
         hlo = compiled.as_text()
@@ -247,7 +248,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                          donate_argnums=pdonate)
             with mesh:
                 pc = pj.lower(*pargs).compile()
-            pca = pc.cost_analysis() or {}
+            pca = compat.cost_analysis(pc)
             return (float(pca.get("flops", 0.0)),
                     float(pca.get("bytes accessed", 0.0)),
                     parse_collective_bytes(pc.as_text()))

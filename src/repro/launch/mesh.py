@@ -3,6 +3,8 @@ module never touches jax device state)."""
 from __future__ import annotations
 
 import jax
+
+from repro.dist import compat  # noqa: F401  (back-fills AxisType/axis_types)
 from jax.sharding import AxisType
 
 

@@ -4,6 +4,13 @@ import sys
 os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "3")   # silence XLA AOT-loader notices
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+try:                                  # the container image doesn't ship hypothesis;
+    import hypothesis  # noqa: F401   # fall back to the deterministic stub
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_stub
+    _hypothesis_stub.install()
+
 import dataclasses  # noqa: E402
 
 import jax  # noqa: E402

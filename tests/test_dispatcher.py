@@ -1,0 +1,178 @@
+"""Dispatcher unit tests on a fake cluster: retry, transient classification,
+and hedged straggler mitigation (exactly one backup, bail-early watcher)."""
+import threading
+import time
+
+import pytest
+
+from repro.core.cluster import Cluster, HostFailure
+from repro.core.dispatcher import Dispatcher, _LatencyModel, _is_transient
+from repro.core.metrics import now
+
+
+class FakeAgent:
+    """Scriptable stand-in for repro.core.agent.Agent: ``behavior(attempt_no)``
+    either returns a value, raises, or sleeps then returns."""
+
+    def __init__(self, behavior):
+        self.behavior = behavior
+        self.calls = []
+        self._lock = threading.Lock()
+
+    def handle(self, host, dep, tokens, driver_name, tl, label):
+        with self._lock:
+            n = len(self.calls)
+            self.calls.append(host.host_id)
+        tl.t_dispatch = tl.t_dispatch or now()
+        out = self.behavior(n)
+        tl.t_done = now()
+        return out
+
+
+def make_dispatcher(behavior, *, n_hosts=2, **kw):
+    cluster = Cluster(n_hosts=n_hosts, slots_per_host=2)
+    agent = FakeAgent(behavior)
+    return Dispatcher(cluster, agent, **kw), cluster, agent
+
+
+# -------------------------------------------------------------------- retry
+
+def test_retry_on_host_failure_then_success():
+    def behavior(n):
+        if n == 0:
+            raise HostFailure("injected")
+        return "ok"
+
+    disp, cluster, agent = make_dispatcher(behavior, hedging=False)
+    try:
+        assert disp.submit(None, [1, 2], "proc").result(timeout=10) == "ok"
+        assert disp.retries == 1
+        assert len(agent.calls) == 2
+        assert agent.calls[0] != agent.calls[1]      # re-dispatched elsewhere
+    finally:
+        cluster.shutdown()
+
+
+def test_retry_exhausts_max_retries():
+    def behavior(n):
+        raise HostFailure(f"attempt {n}")
+
+    disp, cluster, agent = make_dispatcher(behavior, max_retries=3, hedging=False)
+    try:
+        fut = disp.submit(None, [1], "proc")
+        with pytest.raises(HostFailure):
+            fut.result(timeout=10)
+        # initial attempt + max_retries re-dispatches, then gives up
+        assert len(agent.calls) == 4
+        assert disp.retries == 3
+    finally:
+        cluster.shutdown()
+
+
+def test_non_retryable_error_propagates_immediately():
+    def behavior(n):
+        raise ValueError("bad input")
+
+    disp, cluster, agent = make_dispatcher(behavior, hedging=False)
+    try:
+        fut = disp.submit(None, [1], "proc")
+        with pytest.raises(ValueError):
+            fut.result(timeout=10)
+        assert len(agent.calls) == 1
+        assert disp.retries == 0
+    finally:
+        cluster.shutdown()
+
+
+# ---------------------------------------------------------------- transient
+
+def test_is_transient_classification():
+    class JaxRuntimeError(Exception):
+        pass
+
+    class XlaRuntimeError(Exception):
+        pass
+
+    assert _is_transient(JaxRuntimeError("device lost"))
+    assert _is_transient(XlaRuntimeError("dead"))
+    assert _is_transient(RuntimeError("program not found in cache"))
+    assert not _is_transient(RuntimeError("shape mismatch"))
+    assert not _is_transient(ValueError("not found"))    # RuntimeError only
+
+
+# ------------------------------------------------------------------ hedging
+
+def _seed_p95(disp, key, value=0.02, n=10):
+    assert n >= 8                                 # _LatencyModel needs >= 8
+    for _ in range(n):
+        disp.latency.observe(key, value)
+    assert disp.latency.p95(key) == pytest.approx(value)
+
+
+def test_latency_model_needs_8_samples():
+    lm = _LatencyModel()
+    for i in range(7):
+        lm.observe("k", 0.01)
+        assert lm.p95("k") is None
+    lm.observe("k", 0.01)
+    assert lm.p95("k") == pytest.approx(0.01)
+
+
+def test_hedge_launches_exactly_one_backup():
+    first_started = threading.Event()
+
+    def behavior(n):
+        if n == 0:                                # straggler: way past 3 x p95
+            first_started.set()
+            time.sleep(1.0)
+            return "slow"
+        return "fast"
+
+    disp, cluster, agent = make_dispatcher(behavior, hedge_factor=3.0)
+    _seed_p95(disp, "noop:proc")
+    try:
+        t0 = time.perf_counter()
+        fut = disp.submit(None, [1], "proc")
+        assert fut.result(timeout=10) == "fast"   # backup wins the race
+        assert time.perf_counter() - t0 < 1.0     # didn't wait for the straggler
+        assert first_started.is_set()
+        assert disp.hedges_launched == 1
+        time.sleep(0.2)                           # no second hedge appears
+        assert disp.hedges_launched == 1
+        assert len(agent.calls) == 2
+    finally:
+        cluster.shutdown()
+
+
+def test_no_hedge_when_attempt_is_fast():
+    disp, cluster, agent = make_dispatcher(lambda n: "ok", hedge_factor=3.0)
+    _seed_p95(disp, "noop:proc")
+    try:
+        assert disp.submit(None, [1], "proc").result(timeout=10) == "ok"
+        time.sleep(0.3)                           # longer than 3 x p95
+        assert disp.hedges_launched == 0
+        assert len(agent.calls) == 1
+    finally:
+        cluster.shutdown()
+
+
+def test_hedge_watcher_bails_once_result_is_done():
+    """The watcher thread must exit as soon as the request settles, not block
+    its daemon thread for the full hedge deadline (thread-leak regression)."""
+    def behavior(n):
+        return "ok"
+
+    def watchers():
+        return [t for t in threading.enumerate() if "hedge_watch" in t.name]
+
+    disp, cluster, agent = make_dispatcher(behavior, hedge_factor=3.0)
+    _seed_p95(disp, "noop:proc", value=30.0)      # deadline would be 90 s
+    try:
+        assert disp.submit(None, [1], "proc").result(timeout=10) == "ok"
+        deadline = time.time() + 5.0
+        while watchers() and time.time() < deadline:
+            time.sleep(0.01)
+        assert not watchers()                      # exited well before 90 s
+        assert disp.hedges_launched == 0
+    finally:
+        cluster.shutdown()

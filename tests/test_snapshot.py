@@ -1,0 +1,117 @@
+"""SnapshotStore: storable-view round-trips, atomic publish, store hygiene,
+and the snapshot vs generic-checkpoint equivalence."""
+import json
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+import pytest
+
+from repro.core.snapshot import (
+    SnapshotStore, load_generic_checkpoint, save_generic_checkpoint,
+)
+
+
+def _assert_tree_equal(got, want):
+    jax.tree.map(
+        lambda g, w: np.testing.assert_array_equal(
+            np.asarray(g, np.float32), np.asarray(w, np.float32)), got, want)
+
+
+# ------------------------------------------------------------- dtype round-trip
+
+@pytest.mark.parametrize("dtype", ["bfloat16", "float8_e4m3fn", "float8_e5m2"])
+def test_roundtrip_ml_dtypes_uint_view(tmp_path, dtype):
+    """bf16/fp8 leaves go through the _to_storable same-width uint view."""
+    store = SnapshotStore(tmp_path)
+    dt = getattr(ml_dtypes, dtype)
+    tree = {"w": np.arange(-8, 8, dtype=np.float32).reshape(4, 4).astype(dt),
+            "b": np.asarray([0.5, -0.25], dtype=dt)}
+    store.save("m", tree)
+    back = store.load_host("m")
+    assert back["w"].dtype == np.dtype(dt)
+    np.testing.assert_array_equal(back["w"].view(np.uint16 if dt == ml_dtypes.bfloat16
+                                                 else np.uint8),
+                                  tree["w"].view(np.uint16 if dt == ml_dtypes.bfloat16
+                                                 else np.uint8))
+    _assert_tree_equal(back, tree)
+    # the on-disk index records the logical dtype, not the uint view
+    index = json.loads((tmp_path / "m" / "index.json").read_text())
+    assert {e["dtype"] for e in index["leaves"]} == {dtype}
+
+
+def test_roundtrip_native_dtypes_and_structure(tmp_path):
+    store = SnapshotStore(tmp_path)
+    tree = {"layers": [{"w": np.ones((2, 3), np.float32)},
+                       {"w": np.zeros((2, 3), np.float32)}],
+            "meta": (np.int32(7), None),
+            "empty": ()}
+    store.save("m", tree)
+    back = store.load_host("m", mmap=False)
+    assert isinstance(back["layers"], list) and isinstance(back["meta"], tuple)
+    assert back["meta"][1] is None
+    assert back["empty"] == ()                     # empty-tuple node survives
+    _assert_tree_equal(back["layers"], tree["layers"])
+    assert int(back["meta"][0]) == 7
+
+
+def test_scalar_leaves_roundtrip(tmp_path):
+    store = SnapshotStore(tmp_path)
+    tree = {"step": np.int32(42), "loss": np.float32(1.5),
+            "gate": np.asarray(0.75, dtype=ml_dtypes.bfloat16)}
+    store.save("s", tree)
+    back = store.load_host("s")
+    assert int(back["step"]) == 42
+    assert float(back["loss"]) == 1.5
+    assert back["gate"].dtype == np.dtype(ml_dtypes.bfloat16)
+    assert float(np.asarray(back["gate"], np.float32)) == 0.75
+
+
+# ------------------------------------------------------------- atomic publish
+
+def test_atomic_publish_over_existing_snapshot(tmp_path):
+    store = SnapshotStore(tmp_path)
+    store.save("m", {"w": np.zeros(4, np.float32)})
+    store.save("m", {"w": np.full(8, 7.0, np.float32)})   # different shape too
+    back = store.load_host("m")
+    np.testing.assert_array_equal(np.asarray(back["w"]), np.full(8, 7.0))
+    # no stale leaf files from the first save linger in the published dir
+    leaf_files = sorted(p.name for p in (tmp_path / "m").glob("leaf_*.npy"))
+    assert leaf_files == ["leaf_00000.npy"]
+    assert not (tmp_path / "m.tmp").exists()
+
+
+def test_names_and_evict_exclude_tmp_dirs(tmp_path):
+    store = SnapshotStore(tmp_path)
+    store.save("a", {"w": np.ones(2, np.float32)})
+    store.save("b", {"w": np.ones(2, np.float32)})
+    (tmp_path / "c.tmp").mkdir()                   # killed save leftover
+    assert store.names() == ["a", "b"]
+    assert store.has("a") and not store.has("c")
+    store.evict("a")
+    assert store.names() == ["b"]
+    store.evict("never-existed")                   # eviction is idempotent
+
+
+def test_nbytes_counts_leaf_files(tmp_path):
+    store = SnapshotStore(tmp_path)
+    total = store.save("m", {"w": np.ones((16, 16), np.float32)})
+    assert store.nbytes("m") == total > 16 * 16 * 4
+
+
+# ---------------------------------------------- generic checkpoint equivalence
+
+def test_generic_checkpoint_matches_snapshot(tmp_path):
+    """Both paths reconstruct the same values; the generic path pays the cast."""
+    params = {"w": jnp.linspace(-1, 1, 32).reshape(8, 4).astype(jnp.bfloat16),
+              "b": jnp.arange(4, dtype=jnp.float32)}
+    store = SnapshotStore(tmp_path / "snap")
+    store.save("m", params)
+    save_generic_checkpoint(tmp_path / "ckpt.npz", params)
+
+    from_snapshot = store.load_to_device("m")
+    from_generic = load_generic_checkpoint(tmp_path / "ckpt.npz", params)
+    assert from_generic["w"].dtype == params["w"].dtype   # cast back to target
+    _assert_tree_equal(from_snapshot, params)
+    _assert_tree_equal(from_generic, params)
