@@ -1,5 +1,4 @@
 """Populate EXPERIMENTS.md tables from the dry-run artifacts."""
-import json
 import sys
 from pathlib import Path
 
@@ -35,7 +34,7 @@ def dryrun_table() -> str:
             f"| {r['bytes_per_device']/2**30:.1f} | {r['hlo_lines']} "
             f"| {r['collectives']['count']} ops |")
     # skipped cells
-    from repro.configs import get_config, list_archs
+    from repro.configs import get_config
     rows.append("")
     rows.append("Assignment-skipped cells (recorded, not run):")
     rows.append("")
@@ -64,6 +63,41 @@ def roofline_table() -> str:
     return "\n".join(rows)
 
 
+def startup_breakdown_table() -> str:
+    """Per-driver, per-boot-stage startup decomposition (paper Sec III-C style),
+    from the ``bootstage/*`` rows bench_startup.py writes to bench_rows.csv."""
+    csv = ART.parent / "bench_rows.csv"
+    if not csv.exists():
+        return "(run benchmarks/run.py to populate)"
+    cells = {}          # driver -> {stage: us}
+    walls = {}          # driver -> (wall_us, derived)
+    for line in csv.read_text().splitlines()[1:]:
+        parts = line.split(",", 2)
+        if len(parts) < 2 or not parts[0].startswith("bootstage/"):
+            continue
+        _, driver, stage = parts[0].split("/", 2)
+        if stage == "wall":
+            walls[driver] = (float(parts[1]), parts[2] if len(parts) > 2 else "")
+        else:
+            cells.setdefault(driver, {})[stage] = float(parts[1])
+    if not cells:
+        return "(no bootstage rows in bench_rows.csv)"
+    stages = sorted({s for c in cells.values() for s in c})
+    rows = ["| driver | " + " | ".join(f"{s} ms" for s in stages)
+            + " | sum ms | wall ms | overlap saved ms |",
+            "|---|" + "---|" * (len(stages) + 3)]
+    for driver in sorted(cells):
+        by_stage = cells[driver]
+        ssum = sum(by_stage.values())
+        wall_us, derived = walls.get(driver, (ssum, ""))
+        saved = max(0.0, ssum - wall_us)
+        cols = " | ".join(f"{by_stage[s]/1e3:.2f}" if s in by_stage else "—"
+                          for s in stages)
+        rows.append(f"| {driver} | {cols} | {ssum/1e3:.2f} | {wall_us/1e3:.2f} "
+                    f"| {saved/1e3:.2f} |")
+    return "\n".join(rows)
+
+
 def variants_table() -> str:
     recs = [r for r in load_records(variant=None) if r["variant"] != "baseline"]
     if not recs:
@@ -81,14 +115,45 @@ def variants_table() -> str:
     return "\n".join(rows)
 
 
+SKELETON = """# Experiments
+
+## Startup breakdown (per boot stage)
+
+<!-- STARTUP_TABLE -->
+
+## Multi-pod dry run
+
+<!-- DRYRUN_TABLE -->
+
+## Roofline
+
+<!-- ROOFLINE_TABLE -->
+
+## Variants
+
+<!-- VARIANTS_TABLE -->
+"""
+
+
 def main() -> None:
-    md = (ROOT / "EXPERIMENTS.md").read_text()
-    md = _replace(md, "DRYRUN_TABLE", dryrun_table())
-    md = _replace(md, "ROOFLINE_TABLE", roofline_table())
-    md = _replace(md, "VARIANTS_TABLE", variants_table())
-    (ROOT / "EXPERIMENTS.md").write_text(md)
+    path = ROOT / "EXPERIMENTS.md"
+    md = path.read_text() if path.exists() else SKELETON
+    if "STARTUP_TABLE" not in md:
+        md += "\n## Startup breakdown (per boot stage)\n\n<!-- STARTUP_TABLE -->\n"
+    def safe(fn):
+        try:
+            return fn()
+        except Exception as e:          # missing artifacts shouldn't kill the report
+            return f"(unavailable: {e})"
+
+    startup = safe(startup_breakdown_table)
+    md = _replace(md, "STARTUP_TABLE", startup)
+    md = _replace(md, "DRYRUN_TABLE", safe(dryrun_table))
+    md = _replace(md, "ROOFLINE_TABLE", safe(roofline_table))
+    md = _replace(md, "VARIANTS_TABLE", safe(variants_table))
+    path.write_text(md)
     print("EXPERIMENTS.md tables updated")
-    print(variants_table())
+    print(startup)
 
 
 def _replace(md: str, tag: str, content: str) -> str:

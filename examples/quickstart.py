@@ -39,6 +39,10 @@ def main() -> None:
     tl = gw.recorder.timelines("quick:uni")[-1]
     print(f"  last start breakdown: program={tl.t_program*1e3:.1f} ms, "
           f"weights={tl.t_weights*1e3:.1f} ms, exec={tl.execution*1e3:.1f} ms")
+    stages = ", ".join(f"{k}={v*1e3:.1f}" for k, v in sorted(tl.stage_s.items()))
+    print(f"  boot stages (ms): {stages}")
+    print(f"  boot wall={tl.t_boot_wall*1e3:.1f} ms "
+          f"(overlap saved {tl.boot_overlap_saved*1e3:.1f} ms)")
 
     print("\n1 invoke via the full-JIT cold path (the 'Docker stack' tier):")
     gw.invoke(spec.name, driver="cold_jit", label="quick:jit")

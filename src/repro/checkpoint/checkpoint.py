@@ -14,11 +14,9 @@ Fault-tolerance contract (tested in tests/test_trainer.py):
 """
 from __future__ import annotations
 
-import json
-import shutil
 import threading
 from pathlib import Path
-from typing import Any, Dict, List, Optional
+from typing import Any, List, Optional
 
 import jax
 import numpy as np

@@ -1,6 +1,14 @@
 """repro.core — the paper's contribution: a cold-start-only FaaS runtime for
 XLA-compiled model functions (see DESIGN.md Sec 2-4 for the unikernel mapping)."""
 from repro.core.artifact import ExecutorImage, FunctionSpec, ImageManifest  # noqa: F401
+from repro.core.boot import (  # noqa: F401
+    ENGINE,
+    BootCancelled,
+    BootEngine,
+    BootHandle,
+    BootPlan,
+    Stage,
+)
 from repro.core.compile_cache import CompileCache, enable_xla_disk_cache  # noqa: F401
 from repro.core.deploy import Deployment, deploy, make_serve_fn  # noqa: F401
 from repro.core.drivers import ALL_DRIVERS, make_drivers  # noqa: F401

@@ -4,6 +4,11 @@ One request = select driver -> start executor -> run -> finish (exit / repool),
 with Timeline stamps at each boundary and exact residency accounting on exit.
 With cold drivers "the lifecycle management functionality of the agent becomes
 unnecessary" (paper Sec IV-A) — visible here as the trivial finish path.
+
+The agent is also the claim point for *speculative pre-boots*: the dispatcher
+may have launched the executor boot (via ``preboot``) while the request was
+still queued; ``handle`` then claims the finished boot instead of starting a
+fresh one, and the boot's per-stage timings land in the request's Timeline.
 """
 from __future__ import annotations
 
@@ -11,6 +16,7 @@ from typing import Any, Optional
 
 import numpy as np
 
+from repro.core.boot import BootCancelled, BootHandle
 from repro.core.cluster import Host
 from repro.core.deploy import Deployment
 from repro.core.executor import Executor
@@ -22,8 +28,35 @@ class Agent:
         self.recorder = recorder
         self.residency = residency
 
+    def preboot(self, host: Host, dep: Deployment,
+                driver_name: str) -> Optional[BootHandle]:
+        """Kick off a speculative boot on ``host`` for a queued request.
+
+        Returns None for drivers whose starts are impure (pool checkouts,
+        donor reuse) or trivially cheap — speculation only pays where a real
+        boot pipeline runs.
+        """
+        driver = host.drivers.get(driver_name)
+        if driver is None or not driver.supports_preboot:
+            return None
+        return driver.engine.launch(driver.plan(dep), dep, driver_name=driver.name)
+
+    def _claim_or_start(self, driver, dep: Deployment, tl: Timeline,
+                        preboot: Optional[BootHandle]) -> Executor:
+        if preboot is not None:
+            try:
+                result = preboot.claim()
+            except BootCancelled:
+                pass                          # lost a race — boot fresh below
+            else:
+                tl.record_boot(result.stage_s, result.wall_s)
+                tl.preboot = True
+                return result.executor
+        return driver.start(dep, tl)
+
     def handle(self, host: Host, dep: Deployment, tokens: Optional[np.ndarray],
-               driver_name: str, tl: Timeline, label: Optional[str] = None) -> Any:
+               driver_name: str, tl: Timeline, label: Optional[str] = None,
+               preboot: Optional[BootHandle] = None) -> Any:
         tl.t_dispatch = now()
         host.check_alive()
 
@@ -35,8 +68,18 @@ class Agent:
 
         driver = host.drivers[driver_name]
         tl.t_start_begin = now()
-        ex = driver.start(dep, tl)
-        host.check_alive()
+        ex = self._claim_or_start(driver, dep, tl, preboot)
+        try:
+            host.check_alive()
+        except Exception:
+            # the host died under a live executor: exit it (unless it's a
+            # shared donor) so neither its HBM nor its residency leaks while
+            # the dispatcher re-routes
+            if ex.driver != "fork-donor":
+                ex.exit()
+                self.residency.add_residency(ex.nbytes, ex.resident_seconds,
+                                             ex.busy_seconds)
+            raise
         tl.t_exec_begin = now()
         try:
             out = ex.run(tokens)

@@ -18,7 +18,6 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
-import time
 from typing import Dict, Optional
 
 import jax

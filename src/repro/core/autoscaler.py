@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import math
 import threading
-import time
 from typing import Dict, List, Optional
 
 from repro.core.cluster import Cluster

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import threading
 from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Callable, Dict, List, Optional
+from typing import Callable, List, Optional
 
 from repro.core.drivers import make_drivers
 

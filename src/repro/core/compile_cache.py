@@ -20,9 +20,8 @@ import os
 import pickle
 import shutil
 import threading
-import time
 from pathlib import Path
-from typing import Any, Callable, Optional, Tuple
+from typing import Callable
 
 import jax
 from jax.experimental import serialize_executable as _se
@@ -61,11 +60,29 @@ class CompileCache:
         os.replace(tmp, self.program_path(key))        # atomic publish
         return len(payload)
 
-    def load_program(self, key: str) -> Callable:
-        """Deserialize into a callable executable — the unikernel 'boot'."""
-        payload = self.program_path(key).read_bytes()
+    def read_program_bytes(self, key: str) -> bytes:
+        """Fetch the serialized payload only (the boot pipeline's FetchProgram)."""
+        return self.program_path(key).read_bytes()
+
+    @staticmethod
+    def deserialize_program(payload: bytes) -> Callable:
+        """Payload -> loaded executable (the boot pipeline's DeserializeProgram)."""
         blob = pickle.loads(payload)
         return _se.deserialize_and_load(*blob)
+
+    def load_program(self, key: str) -> Callable:
+        """Deserialize into a callable executable — the unikernel 'boot'."""
+        return self.deserialize_program(self.read_program_bytes(key))
+
+    def load_program_async(self, key: str):
+        """Fetch + deserialize on a background thread; returns a Future.
+
+        Lets a caller overlap program acquisition with snapshot weight loading
+        without going through the full BootEngine.
+        """
+        from repro.core.boot import spawn_future
+        return spawn_future(lambda: self.load_program(key),
+                            name=f"compilecache-load-{key[:12]}")
 
     def put_manifest(self, key: str, manifest: ImageManifest) -> None:
         self.manifest_path(key).write_text(manifest.to_json())

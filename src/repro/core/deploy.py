@@ -12,7 +12,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -76,6 +76,13 @@ class Deployment:
         if self.fallback_program is not None:
             return self.fallback_program
         return self.cache.load_program(self.image.key)
+
+    def fetch_program_payload(self) -> Optional[bytes]:
+        """Serialized-program bytes for the boot pipeline's FetchProgram stage,
+        or None when this host degraded to the in-process fallback program."""
+        if self.fallback_program is not None:
+            return None
+        return self.cache.read_program_bytes(self.image.key)
 
     def example_tokens(self, seed: int = 0) -> np.ndarray:
         rng = np.random.default_rng(seed)

@@ -9,7 +9,11 @@ routing is just least-loaded. What remains is what any large fleet needs:
 * hedging: if an attempt exceeds ``hedge_factor`` x the observed p95 latency for
   that (function, driver), launch a backup on a different host and take the first
   result — the tail-at-scale twin of the paper's overload observation (Fig 1/2:
-  start latency blows up past the core count).
+  start latency blows up past the core count);
+* speculative pre-boot: with ``speculative=True`` the dispatcher starts the
+  executor boot (via the agent's BootEngine handle) the moment a host is picked
+  — while the request may still be waiting for a slot — and cancels it cleanly
+  if a hedge or retry wins the race, so no device memory leaks from the loser.
 """
 from __future__ import annotations
 
@@ -70,30 +74,50 @@ def _is_transient(err: BaseException) -> bool:
 class Dispatcher:
     def __init__(self, cluster: Cluster, agent: Agent, *,
                  max_retries: int = 3, hedge_factor: float = 3.0,
-                 hedging: bool = True) -> None:
+                 hedging: bool = True, speculative: bool = False) -> None:
         self.cluster = cluster
         self.agent = agent
         self.max_retries = max_retries
         self.hedge_factor = hedge_factor
         self.hedging = hedging
+        self.speculative = speculative
         self.latency = _LatencyModel()
         self.hedges_launched = 0
+        self.preboots_launched = 0
         self.retries = 0
         self._lock = threading.Lock()
 
     # ------------------------------------------------------------------ public
     def submit(self, dep: Optional[Deployment], tokens, driver_name: str,
-               label: Optional[str] = None) -> Future:
+               label: Optional[str] = None,
+               speculative: Optional[bool] = None) -> Future:
         """Dispatch one request; returns a Future with the result."""
         result: Future = Future()
         tl = Timeline(t_enqueue=now())
+        spec = self.speculative if speculative is None else speculative
         self._attempt(result, dep, tokens, driver_name, tl, tried=set(), n_try=0,
-                      label=label, allow_hedge=self.hedging)
+                      label=label, allow_hedge=self.hedging, speculative=spec)
         return result
 
     # ---------------------------------------------------------------- internal
+    def _preboot(self, host, dep, driver_name: str):
+        """Start a speculative boot for a request headed to ``host``, if the
+        agent and driver support it. Never raises — speculation is best-effort."""
+        pre_fn = getattr(self.agent, "preboot", None)
+        if pre_fn is None:
+            return None
+        try:
+            handle = pre_fn(host, dep, driver_name)
+        except Exception:
+            return None
+        if handle is not None:
+            with self._lock:
+                self.preboots_launched += 1
+        return handle
+
     def _attempt(self, result: Future, dep, tokens, driver_name: str, tl: Timeline,
-                 tried: set, n_try: int, label, allow_hedge: bool) -> None:
+                 tried: set, n_try: int, label, allow_hedge: bool,
+                 speculative: bool = False) -> None:
         key = f"{dep.name if dep else 'noop'}:{driver_name}"
         try:
             host = self.cluster.pick_host(exclude=tried)
@@ -102,14 +126,28 @@ class Dispatcher:
             return
         tried = tried | {host.host_id}
 
+        preboot = None
+        if speculative and dep is not None:
+            preboot = self._preboot(host, dep, driver_name)
+            if preboot is not None:
+                # whichever attempt settles the request first, an unclaimed
+                # speculative boot must die with its executor
+                result.add_done_callback(lambda _f: preboot.cancel())
+
         def work():
-            out = self.agent.handle(host, dep, tokens, driver_name, tl, label)
+            if preboot is None:
+                out = self.agent.handle(host, dep, tokens, driver_name, tl, label)
+            else:
+                out = self.agent.handle(host, dep, tokens, driver_name, tl, label,
+                                        preboot=preboot)
             self.latency.observe(key, tl.e2e)
             return out
 
         fut = host.submit(work)
 
         def on_done(f: Future) -> None:
+            if preboot is not None and f.exception() is not None:
+                preboot.cancel()              # failed before (or during) claim
             if result.done():
                 return
             err = f.exception()
@@ -122,7 +160,7 @@ class Dispatcher:
                     self.retries += 1
                 fresh = Timeline(t_enqueue=tl.t_enqueue)
                 self._attempt(result, dep, tokens, driver_name, fresh, tried,
-                              n_try + 1, label, allow_hedge)
+                              n_try + 1, label, allow_hedge, speculative)
             else:
                 _settle(result, error=err)
 

@@ -6,14 +6,17 @@ Ordered fastest -> slowest start, with their Sec II/III analogues:
 |-------------------|---------------------------------|-------------------------------------|
 | process           | bare process (`/bin/date`)      | reuse the resident donor executor   |
 | fork              | fork()/clone(), solo5-spt       | alias donor weights (COW) + program |
-| unikernel         | IncludeOS-hvt  (the paper's bet)| AOT deserialize + snapshot mmap->dev|
+| unikernel         | IncludeOS-hvt  (the paper's bet)| AOT deserialize || snapshot->device |
 | paused            | Fn paused containers/Firecracker| cached program + host RAM -> device |
 | warm              | warm Lambda / warm Fn-Docker    | pool checkout (no work, holds HBM)  |
 | cold_jit_cached   | gVisor/runc                     | re-trace + XLA disk-cache hit + ckpt|
 | cold_jit          | full Docker stack               | re-trace + full XLA compile + ckpt  |
 
-Every driver returns a started Executor and fills Timeline.t_program/t_weights so the
-benchmarks can decompose startup exactly like the paper decomposes container layers.
+Every driver is a *declaration*: ``plan(dep)`` returns a BootPlan over the
+shared stage vocabulary in :mod:`repro.core.boot`, and the shared ``start``
+body hands it to the BootEngine — which times every stage into
+``Timeline.stage_s`` and overlaps the program and weights tracks. No driver
+hand-rolls a serial start path anymore.
 """
 from __future__ import annotations
 
@@ -23,17 +26,40 @@ from typing import Dict, Optional
 import jax
 import numpy as np
 
+from repro.core.boot import (
+    ENGINE,
+    AliasDonor,
+    BootEngine,
+    BootPlan,
+    DevicePut,
+    DeserializeProgram,
+    FetchParked,
+    FetchProgram,
+    Finalize,
+    PoolCheckout,
+    RestoreWeightsHost,
+    ReuseDonor,
+    TraceCompile,
+)
 from repro.core.deploy import Deployment
-from repro.core.executor import Executor, tree_nbytes
-from repro.core.metrics import Timeline, now
-from repro.core.snapshot import load_generic_checkpoint
+from repro.core.executor import Executor, ExecutorState
+from repro.core.metrics import Timeline
 
 
 class Driver:
     name: str = "base"
+    engine: BootEngine = ENGINE
+    # drivers whose boots are pure (no pool/donor state mutated before the
+    # executor is claimed) may be started speculatively by the dispatcher
+    supports_preboot: bool = False
+
+    def plan(self, dep: Deployment) -> BootPlan:
+        """Declare this driver's start path as a BootPlan."""
+        raise NotImplementedError
 
     def start(self, dep: Deployment, tl: Timeline) -> Executor:
-        raise NotImplementedError
+        """The ONE start body shared by every driver: execute the declaration."""
+        return self.engine.execute(self.plan(dep), dep, tl, driver_name=self.name)
 
     def finish(self, dep: Deployment, ex: Executor) -> None:
         """Post-request lifecycle. Cold drivers exit; pool drivers return."""
@@ -41,19 +67,18 @@ class Driver:
 
 
 class UnikernelDriver(Driver):
-    """The paper's contribution: per-request cold start from a single-purpose image."""
+    """The paper's contribution: per-request cold start from a single-purpose
+    image — program deserialize and snapshot restore run CONCURRENTLY."""
 
     name = "unikernel"
+    supports_preboot = True
 
-    def start(self, dep: Deployment, tl: Timeline) -> Executor:
-        t0 = now()
-        program = dep.load_program()
-        tl.t_program = now() - t0
-        t1 = now()
-        params = dep.snapshots.load_to_device(dep.image.key)
-        params = jax.block_until_ready(params)
-        tl.t_weights = now() - t1
-        return Executor(dep.image.key, self.name, program, params)
+    def plan(self, dep: Deployment) -> BootPlan:
+        return BootPlan([
+            FetchProgram(), DeserializeProgram(),            # program track
+            RestoreWeightsHost("snapshot"), DevicePut(),     # weights track
+            Finalize(),
+        ])
 
 
 class ForkDriver(Driver):
@@ -61,7 +86,8 @@ class ForkDriver(Driver):
 
     name = "fork"
 
-    def __init__(self) -> None:
+    def __init__(self, on_exit=None) -> None:
+        self.on_exit = on_exit
         self._donors: Dict[str, Executor] = {}
         self._lock = threading.Lock()
 
@@ -69,24 +95,30 @@ class ForkDriver(Driver):
         with self._lock:
             donor = self._donors.get(dep.image.key)
             if donor is None or donor.params is None:
-                program = dep.load_program()
-                params = dep.snapshots.load_to_device(dep.image.key)
-                donor = Executor(dep.image.key, "fork-donor", program, params)
+                donor = self.engine.execute(
+                    UnikernelDriver().plan(dep), dep, Timeline(),
+                    driver_name="fork-donor")
                 self._donors[dep.image.key] = donor
             return donor
 
-    def start(self, dep: Deployment, tl: Timeline) -> Executor:
-        donor = self.ensure_donor(dep)
-        t0 = now()
-        ex = Executor(dep.image.key, self.name, donor.program, donor.params,
-                      shared_weights=True)
-        tl.t_program = 0.0
-        tl.t_weights = now() - t0
-        return ex
+    def plan(self, dep: Deployment) -> BootPlan:
+        return BootPlan([AliasDonor(self.ensure_donor(dep)), Finalize()])
 
     def donor_nbytes(self) -> int:
         with self._lock:
             return sum(d.nbytes for d in self._donors.values() if d.params is not None)
+
+    def evict_donors(self) -> list:
+        """Exit all donors (gateway shutdown) so their HBM residency is
+        accounted via on_exit instead of silently vanishing."""
+        with self._lock:
+            donors = [d for d in self._donors.values() if d.params is not None]
+            self._donors.clear()
+        for d in donors:
+            d.exit()
+            if self.on_exit is not None:
+                self.on_exit(d)
+        return donors
 
 
 class ProcessDriver(ForkDriver):
@@ -94,18 +126,21 @@ class ProcessDriver(ForkDriver):
 
     name = "process"
 
-    def start(self, dep: Deployment, tl: Timeline) -> Executor:
-        donor = self.ensure_donor(dep)
-        tl.t_program = 0.0
-        tl.t_weights = 0.0
-        return donor
+    def plan(self, dep: Deployment) -> BootPlan:
+        return BootPlan([ReuseDonor(self.ensure_donor(dep))])
 
     def finish(self, dep: Deployment, ex: Executor) -> None:
         pass  # donor stays resident
 
 
 class PausedDriver(Driver):
-    """Fn's paused containers: program cached, weights parked in host DRAM."""
+    """Fn's paused containers: program cached, weights parked in host DRAM.
+
+    Not pre-bootable: ``plan()`` on a cold park would run the full host-side
+    parking (load_program + non-mmap weight read) synchronously on the
+    dispatcher's submit thread, and the boot itself is just a device_put —
+    speculation has nothing to overlap.
+    """
 
     name = "paused"
 
@@ -124,13 +159,9 @@ class PausedDriver(Driver):
                 self._parked[dep.image.key] = entry
             return entry
 
-    def start(self, dep: Deployment, tl: Timeline) -> Executor:
+    def plan(self, dep: Deployment) -> BootPlan:
         program, host = self.ensure_parked(dep)
-        tl.t_program = 0.0
-        t1 = now()
-        params = jax.block_until_ready(jax.tree.map(jax.device_put, host))
-        tl.t_weights = now() - t1
-        return Executor(dep.image.key, self.name, program, params)
+        return BootPlan([FetchParked(program, host), DevicePut(), Finalize()])
 
 
 class WarmDriver(Driver):
@@ -146,23 +177,28 @@ class WarmDriver(Driver):
 
     def prewarm(self, dep: Deployment, n: int) -> None:
         for _ in range(n):
-            ex = self.fallback.start(dep, Timeline())
-            ex.driver = self.name
+            ex = self.engine.execute(self.fallback.plan(dep), dep, Timeline(),
+                                     driver_name=self.name)
             with self._lock:
                 self._pools.setdefault(dep.image.key, []).append(ex)
 
-    def start(self, dep: Deployment, tl: Timeline) -> Executor:
+    def _checkout(self, key: str) -> Optional[Executor]:
         with self._lock:
-            pool = self._pools.setdefault(dep.image.key, [])
-            if pool:
-                tl.t_program = 0.0
-                tl.t_weights = 0.0
-                return pool.pop()
-        ex = self.fallback.start(dep, tl)                    # cold miss
-        ex.driver = self.name
-        return ex
+            pool = self._pools.setdefault(key, [])
+            return pool.pop() if pool else None
+
+    def plan(self, dep: Deployment) -> BootPlan:
+        ex = self._checkout(dep.image.key)
+        if ex is not None:
+            return BootPlan([PoolCheckout(ex)])
+        # cold miss: run (and per-stage time) the fallback driver's plan
+        return self.fallback.plan(dep)
 
     def finish(self, dep: Deployment, ex: Executor) -> None:
+        if ex.state is not ExecutorState.READY:
+            # a crashed/EXITED executor must never re-enter the pool — it would
+            # poison every subsequent checkout with a dead program
+            return
         with self._lock:
             self._pools.setdefault(dep.image.key, []).append(ex)
 
@@ -189,21 +225,19 @@ class WarmDriver(Driver):
 
 
 class ColdJITDriver(Driver):
-    """Full Docker-stack analogue: re-trace + full XLA compile + generic checkpoint."""
+    """Full Docker-stack analogue: re-trace + full XLA compile + generic checkpoint
+    (the trace/compile still overlaps the checkpoint parse — even the slow path
+    benefits from the staged pipeline)."""
 
     name = "cold_jit"
+    supports_preboot = True
 
-    def start(self, dep: Deployment, tl: Timeline) -> Executor:
-        t0 = now()
-        # fresh wrapper identity -> guaranteed re-trace + compile
-        fresh = jax.jit(lambda p, t: dep.serve_fn(p, t))
-        compiled = fresh.lower(dep.abstract_params, dep.abstract_tokens).compile()
-        tl.t_program = now() - t0
-        t1 = now()
-        params = load_generic_checkpoint(dep.generic_ckpt, dep.abstract_params)
-        params = jax.block_until_ready(params)
-        tl.t_weights = now() - t1
-        return Executor(dep.image.key, self.name, compiled, params)
+    def plan(self, dep: Deployment) -> BootPlan:
+        return BootPlan([
+            TraceCompile(),                                  # program track
+            RestoreWeightsHost("generic"), DevicePut(),      # weights track
+            Finalize(),
+        ])
 
 
 class ColdJITCachedDriver(ColdJITDriver):
@@ -218,10 +252,9 @@ ALL_DRIVERS = ("process", "fork", "unikernel", "paused", "warm",
 
 
 def make_drivers(on_exit=None) -> Dict[str, Driver]:
-    fork = ForkDriver()
     return {
-        "process": ProcessDriver(),
-        "fork": fork,
+        "process": ProcessDriver(on_exit=on_exit),
+        "fork": ForkDriver(on_exit=on_exit),
         "unikernel": UnikernelDriver(),
         "paused": PausedDriver(),
         "warm": WarmDriver(on_exit=on_exit),

@@ -33,7 +33,7 @@ from repro.core.snapshot import SnapshotStore
 class Gateway:
     def __init__(self, *, n_hosts: int = 1, slots_per_host: int = 4,
                  mode: str = "cold", work_dir: Optional[str] = None,
-                 hedging: bool = True) -> None:
+                 hedging: bool = True, speculative: bool = False) -> None:
         assert mode in ("cold", "warm")
         self.mode = mode
         self.work_dir = work_dir or tempfile.mkdtemp(prefix="repro_faas_")
@@ -45,7 +45,8 @@ class Gateway:
         self.cluster = Cluster(n_hosts=n_hosts, slots_per_host=slots_per_host,
                                on_exit=self._account_exit)
         self.agent = Agent(self.recorder, self.residency)
-        self.dispatcher = Dispatcher(self.cluster, self.agent, hedging=hedging)
+        self.dispatcher = Dispatcher(self.cluster, self.agent, hedging=hedging,
+                                     speculative=speculative)
         self.deployments: Dict[str, Deployment] = {}
         if mode == "warm":
             self.scaler = WarmPoolAutoscaler(self.cluster, self.deployments)
@@ -67,25 +68,21 @@ class Gateway:
         return "unikernel" if self.mode == "cold" else "warm"
 
     def invoke_async(self, fn_name: str, tokens: Optional[np.ndarray] = None,
-                     driver: Optional[str] = None,
-                     label: Optional[str] = None) -> Future:
+                     driver: Optional[str] = None, label: Optional[str] = None,
+                     speculative: Optional[bool] = None) -> Future:
         dep = self.deployments[fn_name]
         driver = driver or self.default_driver()
         self.scaler.observe_arrival(fn_name)
         if tokens is None:
             tokens = dep.example_tokens()
-        fut = self.dispatcher.submit(dep, tokens, driver, label=label)
-
-        def _observe(f: Future) -> None:
-            if f.exception() is None:
-                pass
-        fut.add_done_callback(_observe)
-        return fut
+        return self.dispatcher.submit(dep, tokens, driver, label=label,
+                                      speculative=speculative)
 
     def invoke(self, fn_name: str, tokens: Optional[np.ndarray] = None,
                driver: Optional[str] = None, label: Optional[str] = None,
-               timeout: float = 600.0):
-        return self.invoke_async(fn_name, tokens, driver, label).result(timeout)
+               timeout: float = 600.0, speculative: Optional[bool] = None):
+        return self.invoke_async(fn_name, tokens, driver, label,
+                                 speculative=speculative).result(timeout)
 
     def noop(self, label: str = "noop", timeout: float = 60.0):
         """The paper's /noop URL: platform overhead with no function work."""
@@ -104,11 +101,17 @@ class Gateway:
     # ---------------------------------------------------------------- shutdown
     def shutdown(self) -> None:
         self.scaler.stop()
-        # flush warm pools so their residency lands in the tracker (via on_exit)
         for host in self.cluster.hosts:
+            # flush warm pools so their residency lands in the tracker (via on_exit)
             warm = host.drivers.get("warm")
-            if warm is None:
-                continue
-            for key in list(getattr(warm, "_pools", {})):
-                warm.expire_idle(key, 0)
+            if warm is not None:
+                for key in list(getattr(warm, "_pools", {})):
+                    warm.expire_idle(key, 0)
+            # evict fork/process donors too — they hold HBM for the platform's
+            # whole lifetime and would otherwise never reach _account_exit,
+            # under-reporting residency for the warm-adjacent drivers
+            for name in ("fork", "process"):
+                drv = host.drivers.get(name)
+                if drv is not None and hasattr(drv, "evict_donors"):
+                    drv.evict_donors()
         self.cluster.shutdown()

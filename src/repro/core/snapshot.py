@@ -15,14 +15,12 @@ the closest CPU analogue of DMA-ing straight into HBM.
 """
 from __future__ import annotations
 
-import hashlib
 import json
 import os
 import shutil
 import threading
-import time
 from pathlib import Path
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import ml_dtypes
@@ -116,17 +114,35 @@ class SnapshotStore:
         return total
 
     # ------------------------------------------------------------------- load
+    def read_index(self, name: str) -> Dict[str, Any]:
+        """Parse index.json (tree structure + per-leaf shape/dtype/file)."""
+        return json.loads((self._dir(name) / "index.json").read_text())
+
+    def iter_host_leaves(self, name: str, mmap: bool = True):
+        """Yield host leaves one at a time, in ordinal order.
+
+        The chunked-load primitive: a streaming caller can consume leaf k
+        while leaf k+1 is still being opened, instead of waiting for the whole
+        tree (``load_host`` itself is this iterator, fully drained; with mmap
+        the bytes page in lazily during the eventual device transfer).
+        """
+        d = self._dir(name)
+        for e in self.read_index(name)["leaves"]:
+            yield _from_storable(
+                np.load(d / e["file"], mmap_mode="r" if mmap else None),
+                e["dtype"])
+
     def load_host(self, name: str, mmap: bool = True) -> Any:
         """Load as host numpy arrays (mmap'd by default). No device transfer."""
-        d = self._dir(name)
-        index = json.loads((d / "index.json").read_text())
-        leaves = [
-            _from_storable(np.load(d / e["file"], mmap_mode="r" if mmap else None),
-                           e["dtype"])
-            for e in index["leaves"]
-        ]
-        structure = index["treedef"]
-        return _rebuild_structure(structure, leaves)
+        index = self.read_index(name)
+        leaves = list(self.iter_host_leaves(name, mmap=mmap))
+        return _rebuild_structure(index["treedef"], leaves)
+
+    def load_host_async(self, name: str, mmap: bool = True):
+        """Kick off ``load_host`` on a background thread; returns a Future."""
+        from repro.core.boot import spawn_future
+        return spawn_future(lambda: self.load_host(name, mmap=mmap),
+                            name=f"snapshot-load-{name[:12]}")
 
     def load_to_device(self, name: str, shardings=None, mmap: bool = True) -> Any:
         """mmap -> device_put (optionally with target shardings)."""
@@ -158,13 +174,23 @@ def save_generic_checkpoint(path: str | Path, params) -> int:
     return Path(str(path) if str(path).endswith(".npz") else str(path) + ".npz").stat().st_size
 
 
-def load_generic_checkpoint(path: str | Path, like) -> Any:
-    """Load + cast back to the target dtypes (pays the transform in the start path)."""
+def load_generic_host(path: str | Path, like) -> Any:
+    """Host half of the generic load: full parse + cast, no device transfer.
+
+    Split out so the boot pipeline can time it as its own stage (and overlap
+    it with program acquisition) before the streamed device_put.
+    """
     with np.load(path) as z:
         arrays = [z[f"a{i}"] for i in range(len(z.files))]
     leaves, treedef = jax.tree.flatten(like)
     cast = [np.asarray(a, dtype=l.dtype) for a, l in zip(arrays, leaves)]
-    return jax.tree.unflatten(treedef, [jax.device_put(a) for a in cast])
+    return jax.tree.unflatten(treedef, cast)
+
+
+def load_generic_checkpoint(path: str | Path, like) -> Any:
+    """Load + cast back to the target dtypes (pays the transform in the start path)."""
+    host = load_generic_host(path, like)
+    return jax.tree.map(jax.device_put, host)
 
 
 # --------------------------------------------- structure (de)serialization

@@ -21,7 +21,6 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels import ref
 
 NEG_INF = -1e30
 DEFAULT_BLOCK_KV = 512

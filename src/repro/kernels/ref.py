@@ -10,9 +10,6 @@ exponents), and (c) define memory profiles that actually fit HBM at 32k-524k tok
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 

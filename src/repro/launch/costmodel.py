@@ -23,10 +23,8 @@ collectives. Two complementary fixes, both recorded per cell:
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict
 
-import jax
 
 from repro.configs.base import ArchConfig, ShapeSpec
 from repro.models.transformer import family_kind

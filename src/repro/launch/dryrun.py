@@ -30,7 +30,6 @@ from pathlib import Path
 from typing import Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import SHAPES, get_config, list_archs
 from repro.configs.base import ArchConfig, ShapeSpec
@@ -41,7 +40,6 @@ from repro.dist.sharding import (
 from repro.launch.costmodel import analytic_flops, probe_costs
 from repro.launch.mesh import make_production_mesh, mesh_tag
 from repro.models import build_model, input_specs
-from repro.models.layers import ParamSpec
 from repro.optim import AdamW, AdamWConfig
 from repro.train.step import make_train_step
 

@@ -8,7 +8,7 @@ import jax.numpy as jnp
 
 from repro.dist.sharding import active_rules, constrain, current_mesh
 from repro.kernels import ops
-from repro.models.layers import ParamSpec, bias_spec, dense_spec, positional
+from repro.models.layers import bias_spec, dense_spec, positional
 
 
 def attention_specs(cfg, dtype, stack: Tuple[int, ...] = ()):

@@ -12,7 +12,7 @@ Model apply-functions consume the plain array pytree (same structure as the spec
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Sequence, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

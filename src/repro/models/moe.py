@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist.sharding import active_rules, constrain
-from repro.models.layers import ParamSpec, dense_spec, mlp_specs, apply_mlp, normal_init
+from repro.models.layers import ParamSpec, mlp_specs, apply_mlp, normal_init
 
 
 def expert_capacity(n_tokens: int, n_experts: int, top_k: int, capacity_factor: float) -> int:

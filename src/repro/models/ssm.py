@@ -8,7 +8,7 @@ logical axis (tensor-parallel over 'model' by default).
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,7 @@ stacked on the leading layer axis and threaded through ``lax.scan`` as xs/ys.
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import List
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,7 @@ state, stats). State specs (for pjit shardings) mirror the parameter logical axe
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

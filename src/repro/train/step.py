@@ -8,7 +8,7 @@ lowers for the roofline analysis so what we analyze is what we run.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

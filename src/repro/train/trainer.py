@@ -15,16 +15,14 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from pathlib import Path
-from typing import Any, Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs.base import ArchConfig
 from repro.data import SyntheticTokenPipeline
-from repro.dist.sharding import Rules, abstract_state, param_shardings, use_rules
+from repro.dist.sharding import Rules, param_shardings, use_rules
 from repro.models import build_model
 from repro.optim import AdamW, AdamWConfig
 from repro.train.step import make_train_step

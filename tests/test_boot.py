@@ -1,0 +1,336 @@
+"""The staged boot pipeline: per-stage timings for every driver, track overlap,
+speculative pre-boot cancellation hygiene, and warm cold-miss decomposition."""
+import threading
+import time
+import types
+
+import jax
+import pytest
+
+from repro.core.boot import (
+    ENGINE,
+    BootCancelled,
+    BootPlan,
+    Finalize,
+    Stage,
+    TRACK_PROGRAM,
+    TRACK_WEIGHTS,
+    streamed_device_put,
+)
+from repro.core.drivers import ALL_DRIVERS
+from repro.core.executor import ExecutorState
+from repro.core.metrics import Timeline
+
+
+# ------------------------------------------------------------ synthetic plans
+
+
+class _SleepStage(Stage):
+    def __init__(self, name, track, seconds, sets=()):
+        self.name, self.track, self.seconds, self.sets = name, track, seconds, sets
+
+    def run(self, ctx):
+        time.sleep(self.seconds)
+        for attr, value in self.sets:
+            setattr(ctx, attr, value)
+
+
+def _fake_dep():
+    return types.SimpleNamespace(image=types.SimpleNamespace(key="img"))
+
+
+def _two_track_plan(seconds=0.05):
+    return BootPlan([
+        _SleepStage("deserialize_program", TRACK_PROGRAM, seconds,
+                    sets=[("program", lambda p, t: t)]),
+        _SleepStage("restore_weights_host", TRACK_WEIGHTS, seconds,
+                    sets=[("params", {})]),
+        Finalize(),
+    ])
+
+
+def test_engine_overlaps_program_and_weights_tracks():
+    """The tentpole: concurrent tracks => wall < sum of stage times."""
+    tl = Timeline()
+    ex = ENGINE.execute(_two_track_plan(0.05), _fake_dep(), tl, driver_name="t")
+    assert ex.state is ExecutorState.READY
+    ssum = sum(tl.stage_s.values())
+    assert tl.stage_s["deserialize_program"] >= 0.05
+    assert tl.stage_s["restore_weights_host"] >= 0.05
+    assert tl.t_boot_wall < ssum, (tl.t_boot_wall, ssum)   # ran concurrently
+    assert tl.boot_overlap_saved > 0.02
+    ex.exit()
+
+
+def test_engine_serializes_within_a_track():
+    tl = Timeline()
+    plan = BootPlan([
+        _SleepStage("fetch_program", TRACK_PROGRAM, 0.02),
+        _SleepStage("deserialize_program", TRACK_PROGRAM, 0.02,
+                    sets=[("program", lambda p, t: t)]),
+        _SleepStage("restore_weights_host", TRACK_WEIGHTS, 0.0,
+                    sets=[("params", {})]),
+        Finalize(),
+    ])
+    ex = ENGINE.execute(plan, _fake_dep(), tl, driver_name="t")
+    assert tl.t_boot_wall >= 0.04                          # same track: serial
+    ex.exit()
+
+
+def test_stage_failure_raises_and_disposes():
+    class Boom(Stage):
+        name, track = "restore_weights_host", TRACK_WEIGHTS
+
+        def run(self, ctx):
+            raise RuntimeError("disk gone")
+
+    plan = BootPlan([
+        _SleepStage("deserialize_program", TRACK_PROGRAM, 0.0,
+                    sets=[("program", lambda p, t: t)]),
+        Boom(), Finalize(),
+    ])
+    with pytest.raises(RuntimeError, match="disk gone"):
+        ENGINE.execute(plan, _fake_dep(), Timeline(), driver_name="t")
+
+
+# --------------------------------------------------- speculative pre-boot
+
+
+def test_preboot_claim_returns_timed_executor():
+    handle = ENGINE.launch(_two_track_plan(0.02), _fake_dep(), driver_name="t")
+    result = handle.claim(timeout=10)
+    assert result.executor.state is ExecutorState.READY
+    assert result.stage_s["deserialize_program"] >= 0.02
+    assert result.wall_s > 0
+    result.executor.exit()
+
+
+def test_preboot_cancel_before_claim_leaves_no_executor():
+    handle = ENGINE.launch(_two_track_plan(0.05), _fake_dep(), driver_name="t")
+    handle.cancel()
+    with pytest.raises(BootCancelled):
+        handle.claim(timeout=10)
+    # whatever the boot built must be exited (no leaked device memory)
+    deadline = time.time() + 5
+    while not handle.done() and time.time() < deadline:
+        time.sleep(0.005)
+    assert handle.done()
+    if handle._result is not None:
+        assert handle._result.executor.state is ExecutorState.EXITED
+        assert handle._result.executor.params is None
+
+
+def test_preboot_cancel_after_completion_exits_executor():
+    handle = ENGINE.launch(_two_track_plan(0.01), _fake_dep(), driver_name="t")
+    deadline = time.time() + 10
+    while not handle.done() and time.time() < deadline:
+        time.sleep(0.005)
+    assert handle.done()
+    ex = handle._result.executor
+    assert ex.state is ExecutorState.READY
+    handle.cancel()
+    assert ex.state is ExecutorState.EXITED
+    with pytest.raises(BootCancelled):
+        handle.claim(timeout=1)
+
+
+def test_preboot_cancel_after_claim_is_noop():
+    handle = ENGINE.launch(_two_track_plan(0.01), _fake_dep(), driver_name="t")
+    result = handle.claim(timeout=10)
+    handle.cancel()
+    assert result.executor.state is ExecutorState.READY   # claimed => ours
+    result.executor.exit()
+
+
+# ------------------------------------------------------------ streamed put
+
+
+def test_streamed_device_put_roundtrip():
+    import numpy as np
+    tree = {"a": np.arange(1024, dtype=np.float32).reshape(32, 32),
+            "b": [np.ones(7, np.int32), None]}
+    out = streamed_device_put(tree, chunk_bytes=512, prefetch=2)
+    np.testing.assert_array_equal(np.asarray(out["a"]), tree["a"])
+    np.testing.assert_array_equal(np.asarray(out["b"][0]), tree["b"][0])
+    assert out["b"][1] is None
+
+
+# ------------------------------------------------- full platform integration
+
+
+@pytest.mark.parametrize("driver", list(ALL_DRIVERS))
+def test_per_stage_timings_populated_for_every_driver(gateway, driver):
+    gw, spec = gateway
+    label = f"bootstage:{driver}"
+    gw.invoke(spec.name, driver=driver, label=label)
+    tl = gw.recorder.timelines(label)[-1]
+    assert tl.stage_s, f"driver {driver} recorded no boot stages"
+    assert all(v >= 0.0 for v in tl.stage_s.values())
+    assert tl.t_boot_wall > 0.0
+    expected = {
+        "process": {"reuse_donor"},
+        "fork": {"alias_donor", "finalize"},
+        "unikernel": {"fetch_program", "deserialize_program",
+                      "restore_weights_host", "device_put", "finalize"},
+        "paused": {"fetch_parked", "device_put", "finalize"},
+        "cold_jit": {"trace_compile", "restore_weights_host", "device_put",
+                     "finalize"},
+        "cold_jit_cached": {"trace_compile", "restore_weights_host",
+                            "device_put", "finalize"},
+    }.get(driver)
+    if expected is not None:
+        assert expected <= set(tl.stage_s), (driver, tl.stage_s)
+
+
+def test_stage_sums_consistent_with_e2e(gateway):
+    gw, spec = gateway
+    gw.invoke(spec.name, driver="unikernel", label="bootsum")
+    tl = gw.recorder.timelines("bootsum")[-1]
+    # phase identity: queue + startup + execution ~ e2e (tiny inter-stamp gaps)
+    phases = tl.queue_wait + tl.startup + tl.execution
+    assert phases == pytest.approx(tl.e2e, rel=0.05, abs=0.01)
+    # the boot wall is the startup (minus bookkeeping around the engine call)
+    assert tl.t_boot_wall <= tl.startup + 0.01
+    assert tl.t_boot_wall == pytest.approx(tl.startup, rel=0.25, abs=0.02)
+    # stage sum bounds the wall from above (overlap can only shrink the wall)
+    assert tl.t_boot_wall <= sum(tl.stage_s.values()) + 0.01
+    # back-compat coarse buckets cover every stage that ran
+    assert tl.t_program + tl.t_weights + tl.stage_s.get("finalize", 0.0) == \
+        pytest.approx(sum(tl.stage_s.values()), abs=1e-9)
+
+
+def test_warm_cold_miss_records_fallback_stage_timings(gateway):
+    gw, spec = gateway
+    dep = gw.deployments[spec.name]
+    for host in gw.cluster.hosts:                         # force a cold miss
+        host.drivers["warm"].expire_idle(dep.image.key, 0)
+    gw.invoke(spec.name, driver="warm", label="warmmiss")
+    tl = gw.recorder.timelines("warmmiss")[-1]
+    # the miss fell back to the unikernel plan — its stages must be visible
+    assert {"deserialize_program", "restore_weights_host",
+            "device_put"} <= set(tl.stage_s), tl.stage_s
+    for host in gw.cluster.hosts:                         # pools are per-host:
+        host.drivers["warm"].prewarm(dep, 1)              # guarantee a hit
+    gw.invoke(spec.name, driver="warm", label="warmhit")
+    tl_hit = gw.recorder.timelines("warmhit")[-1]
+    assert "pool_checkout" in tl_hit.stage_s              # hit: checkout only
+    for host in gw.cluster.hosts:                         # leave no pools behind
+        host.drivers["warm"].expire_idle(dep.image.key, 0)
+
+
+def test_speculative_invoke_end_to_end(gateway):
+    gw, spec = gateway
+    tokens = gw.deployments[spec.name].example_tokens(seed=7)
+    before = gw.dispatcher.preboots_launched
+    out = gw.invoke(spec.name, tokens, driver="unikernel", label="spec:on",
+                    speculative=True)
+    ref = gw.invoke(spec.name, tokens, driver="unikernel", label="spec:off")
+    assert gw.dispatcher.preboots_launched == before + 1
+    import numpy as np
+    np.testing.assert_array_equal(out, ref)
+    tl = gw.recorder.timelines("spec:on")[-1]
+    assert tl.preboot
+    assert tl.stage_s                                     # boot timings carried over
+    assert "deserialize_program" in tl.stage_s
+
+
+def test_speculative_losers_are_cancelled_not_leaked(gateway):
+    """Settle the request while the speculative boot is still in flight: the
+    boot must be cancelled and its executor (if any) exited."""
+    gw, spec = gateway
+    dep = gw.deployments[spec.name]
+    agent = gw.agent
+    host = gw.cluster.hosts[0]
+    driver = host.drivers["unikernel"]
+
+    handle = agent.preboot(host, dep, "unikernel")
+    assert handle is not None
+    handle.cancel()                                       # the hedge "won"
+    deadline = time.time() + 30
+    while not handle.done() and time.time() < deadline:
+        time.sleep(0.01)
+    assert handle.done()
+    if handle._result is not None:
+        assert handle._result.executor.state is ExecutorState.EXITED
+    with pytest.raises(BootCancelled):
+        handle.claim(timeout=1)
+    assert driver.supports_preboot
+
+
+def test_preboot_refused_for_stateful_drivers(gateway):
+    # warm/fork/process mutate pool/donor state; paused would run its whole
+    # host-side parking on the dispatcher thread — none may pre-boot
+    gw, spec = gateway
+    dep = gw.deployments[spec.name]
+    host = gw.cluster.hosts[0]
+    for name in ("warm", "fork", "process", "paused"):
+        assert gw.agent.preboot(host, dep, name) is None
+
+
+def test_async_load_apis(gateway):
+    """The overlap primitives under the engine: snapshot.load_host_async and
+    CompileCache.load_program_async run concurrently and return live objects."""
+    import numpy as np
+    gw, spec = gateway
+    dep = gw.deployments[spec.name]
+    host_fut = gw.snapshots.load_host_async(dep.image.key)
+    if dep.fallback_program is None:
+        prog_fut = gw.cache.load_program_async(dep.image.key)
+        program = prog_fut.result(timeout=60)
+    else:
+        program = dep.fallback_program
+    host = host_fut.result(timeout=60)
+    params = jax.tree.map(jax.device_put, host)
+    out = np.asarray(program(params, dep.example_tokens()))
+    assert out.shape == (spec.batch_size, spec.decode_steps)
+
+
+def test_async_load_relays_errors():
+    from repro.core.boot import spawn_future
+    fut = spawn_future(lambda: 1 / 0, name="t")
+    with pytest.raises(ZeroDivisionError):
+        fut.result(timeout=10)
+
+
+# ----------------------------------------------------------------- satellites
+
+
+def test_warm_finish_never_pools_crashed_executors():
+    from repro.core.drivers import WarmDriver
+    from repro.core.executor import Executor
+    warm = WarmDriver()
+    dep = types.SimpleNamespace(image=types.SimpleNamespace(key="img"))
+    ok = Executor("img", "warm", lambda p, t: t, {})
+    dead = Executor("img", "warm", lambda p, t: t, {})
+    dead.exit()
+    warm.finish(dep, dead)
+    assert warm.pool_size("img") == 0                     # EXITED never pooled
+    warm.finish(dep, ok)
+    assert warm.pool_size("img") == 1
+    warm.expire_idle("img", 0)
+
+
+def test_donor_eviction_accounts_residency(gateway):
+    gw, spec = gateway
+    gw.invoke(spec.name, driver="fork", label="donor:seed")  # materialize donor
+    hosts_with_donor = [h for h in gw.cluster.hosts
+                        if h.drivers["fork"].donor_nbytes() > 0]
+    assert hosts_with_donor
+    before = gw.residency.total_byteseconds
+    evicted = []
+    for h in hosts_with_donor:
+        evicted += h.drivers["fork"].evict_donors()
+    assert evicted
+    assert all(d.state is ExecutorState.EXITED for d in evicted)
+    assert gw.residency.total_byteseconds > before        # landed in the tracker
+    assert all(h.drivers["fork"].donor_nbytes() == 0 for h in gw.cluster.hosts)
+
+
+def test_threads_do_not_accumulate(gateway):
+    """Boot engine worker threads are per-boot and must not pile up."""
+    gw, spec = gateway
+    gw.invoke(spec.name, driver="unikernel", label="threads")
+    time.sleep(0.2)
+    lingering = [t for t in threading.enumerate()
+                 if t.name.startswith("bootengine-") and t.is_alive()]
+    assert len(lingering) <= 2, lingering

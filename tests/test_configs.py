@@ -1,5 +1,4 @@
 """Config registry: 10 archs, 40 cells, param-count model matches real init."""
-import jax
 import pytest
 
 from repro.configs import all_cells, get_config, list_archs

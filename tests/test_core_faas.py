@@ -4,7 +4,7 @@ import time
 import numpy as np
 import pytest
 
-from repro.core import FunctionSpec, Gateway
+from repro.core import FunctionSpec
 from repro.core.executor import ExecutorState
 from repro.core.metrics import LatencyStats, Timeline
 
@@ -67,7 +67,6 @@ def test_node_failure_is_retried(gateway):
     gw, spec = gateway
     gw.cluster.hosts[0].kill()
     try:
-        before = gw.dispatcher.retries
         outs = [gw.invoke(spec.name, driver="unikernel") for _ in range(4)]
         for o in outs:
             assert o.shape == (spec.batch_size, spec.decode_steps)

@@ -1,12 +1,10 @@
 """Sharding rules: shape-aware axis assignment + property tests (hypothesis)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
-from repro.dist.sharding import Rules, constrain, make_rules, preset_names, use_rules
+from repro.dist.sharding import Rules, constrain, make_rules, preset_names
 
 
 def fake_rules(sizes, preset_mapping):

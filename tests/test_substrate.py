@@ -1,5 +1,4 @@
 """Data pipeline, optimizer, checkpoint manager, collectives codecs."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
