@@ -98,6 +98,34 @@ def startup_breakdown_table() -> str:
     return "\n".join(rows)
 
 
+def coalescing_table() -> str:
+    """Open-loop load sweep: cold vs cold+coalesced vs warm at equal arrival
+    rates, from the ``e2e_load/*`` rows bench_e2e.py writes to bench_rows.csv."""
+    csv = ART.parent / "bench_rows.csv"
+    if not csv.exists():
+        return "(run benchmarks/run.py to populate)"
+    cells = []          # (config, rate, throughput, derived-dict)
+    for line in csv.read_text().splitlines()[1:]:
+        parts = line.split(",", 2)
+        if len(parts) < 2 or not parts[0].startswith("e2e_load/"):
+            continue
+        _, config, rate = parts[0].split("/", 2)
+        derived = dict(kv.split("=", 1) for kv in parts[2].split(";")
+                       if "=" in kv) if len(parts) > 2 else {}
+        cells.append((config, rate.removeprefix("rps"), float(parts[1]), derived))
+    if not cells:
+        return "(no e2e_load rows in bench_rows.csv)"
+    rows = ["| config | arrival rps | throughput rps | p50 ms | p95 ms | "
+            "p99 ms | boots/request | mean batch |",
+            "|---|---|---|---|---|---|---|---|"]
+    for config, rate, thr, d in cells:
+        rows.append(
+            f"| {config} | {rate} | {thr:.1f} | {d.get('p50_ms', '—')} "
+            f"| {d.get('p95_ms', '—')} | {d.get('p99_ms', '—')} "
+            f"| {d.get('boots_per_request', '—')} | {d.get('mean_batch', '—')} |")
+    return "\n".join(rows)
+
+
 def variants_table() -> str:
     recs = [r for r in load_records(variant=None) if r["variant"] != "baseline"]
     if not recs:
@@ -121,6 +149,10 @@ SKELETON = """# Experiments
 
 <!-- STARTUP_TABLE -->
 
+## Coalescing under open-loop load
+
+<!-- COALESCING_TABLE -->
+
 ## Multi-pod dry run
 
 <!-- DRYRUN_TABLE -->
@@ -140,6 +172,8 @@ def main() -> None:
     md = path.read_text() if path.exists() else SKELETON
     if "STARTUP_TABLE" not in md:
         md += "\n## Startup breakdown (per boot stage)\n\n<!-- STARTUP_TABLE -->\n"
+    if "COALESCING_TABLE" not in md:
+        md += "\n## Coalescing under open-loop load\n\n<!-- COALESCING_TABLE -->\n"
     def safe(fn):
         try:
             return fn()
@@ -148,6 +182,7 @@ def main() -> None:
 
     startup = safe(startup_breakdown_table)
     md = _replace(md, "STARTUP_TABLE", startup)
+    md = _replace(md, "COALESCING_TABLE", safe(coalescing_table))
     md = _replace(md, "DRYRUN_TABLE", safe(dryrun_table))
     md = _replace(md, "ROOFLINE_TABLE", safe(roofline_table))
     md = _replace(md, "VARIANTS_TABLE", safe(variants_table))

@@ -38,8 +38,9 @@ def main() -> None:
     finally:
         gw.shutdown()
 
-    def make_gateway(mode: str) -> Gateway:
-        return Gateway(n_hosts=2, slots_per_host=3, mode=mode, hedging=False)
+    def make_gateway(**kw) -> Gateway:
+        kw.setdefault("mode", "cold")
+        return Gateway(n_hosts=2, slots_per_host=3, hedging=False, **kw)
 
     bench_e2e.run(make_gateway)
 

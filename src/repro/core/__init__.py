@@ -1,6 +1,7 @@
 """repro.core — the paper's contribution: a cold-start-only FaaS runtime for
 XLA-compiled model functions (see DESIGN.md Sec 2-4 for the unikernel mapping)."""
 from repro.core.artifact import ExecutorImage, FunctionSpec, ImageManifest  # noqa: F401
+from repro.core.batching import BatchingConfig, CoalescedBatch, Coalescer  # noqa: F401
 from repro.core.boot import (  # noqa: F401
     ENGINE,
     BootCancelled,

@@ -12,6 +12,7 @@ fresh one, and the boot's per-stage timings land in the request's Timeline.
 """
 from __future__ import annotations
 
+import threading
 from typing import Any, Optional
 
 import numpy as np
@@ -27,9 +28,13 @@ class Agent:
     def __init__(self, recorder: Recorder, residency: ResidencyTracker) -> None:
         self.recorder = recorder
         self.residency = residency
+        # executor acquisitions (boots, pool checkouts, donor reuses) — with
+        # coalescing, requests_served / boots is the boots-per-request metric
+        self.boots = 0
+        self._lock = threading.Lock()
 
-    def preboot(self, host: Host, dep: Deployment,
-                driver_name: str) -> Optional[BootHandle]:
+    def preboot(self, host: Host, dep: Deployment, driver_name: str,
+                bucket_rows: Optional[int] = None) -> Optional[BootHandle]:
         """Kick off a speculative boot on ``host`` for a queued request.
 
         Returns None for drivers whose starts are impure (pool checkouts,
@@ -39,10 +44,16 @@ class Agent:
         driver = host.drivers.get(driver_name)
         if driver is None or not driver.supports_preboot:
             return None
-        return driver.engine.launch(driver.plan(dep), dep, driver_name=driver.name)
+        if bucket_rows is not None and not driver.supports_batch:
+            return None
+        return driver.engine.launch(driver.plan(dep), dep, driver_name=driver.name,
+                                    bucket_rows=bucket_rows)
 
     def _claim_or_start(self, driver, dep: Deployment, tl: Timeline,
-                        preboot: Optional[BootHandle]) -> Executor:
+                        preboot: Optional[BootHandle],
+                        bucket_rows: Optional[int] = None) -> Executor:
+        with self._lock:
+            self.boots += 1
         if preboot is not None:
             try:
                 result = preboot.claim()
@@ -52,7 +63,7 @@ class Agent:
                 tl.record_boot(result.stage_s, result.wall_s)
                 tl.preboot = True
                 return result.executor
-        return driver.start(dep, tl)
+        return driver.start(dep, tl, bucket_rows=bucket_rows)
 
     def handle(self, host: Host, dep: Deployment, tokens: Optional[np.ndarray],
                driver_name: str, tl: Timeline, label: Optional[str] = None,
@@ -100,3 +111,54 @@ class Agent:
         tl.t_done = now()
         self.recorder.add(label or f"{dep.name}:{driver_name}", tl)
         return np.asarray(out)
+
+    def handle_batch(self, host: Host, dep: Deployment, batch: Any,
+                     driver_name: str, tl: Timeline, label: Optional[str] = None,
+                     preboot: Optional[BootHandle] = None) -> np.ndarray:
+        """One coalesced batch = ONE executor boot serving every member request.
+
+        ``batch`` is a :class:`repro.core.batching.CoalescedBatch`. The boot
+        targets the batch's padded bucket shape; the result rows fan back out
+        to members at the coalescer. Timeline accounting is batch-aware: one
+        member timeline per request lands in the recorder, sharing the boot
+        and execution stamps but keeping each request's own enqueue time — so
+        queue-delay (which includes the coalescing window) stays per-request.
+        """
+        tl.t_dispatch = now()
+        host.check_alive()
+        driver = host.drivers[driver_name]
+        tl.t_start_begin = now()
+        ex = self._claim_or_start(driver, dep, tl, preboot,
+                                  bucket_rows=batch.padded_rows)
+        try:
+            host.check_alive()
+        except Exception:
+            if ex.driver != "fork-donor":
+                ex.exit()
+                self.residency.add_residency(ex.nbytes, ex.resident_seconds,
+                                             ex.busy_seconds)
+            raise
+        tl.t_exec_begin = now()
+        try:
+            out = ex.run_batch(batch.tokens, valid_rows=batch.valid_rows)
+        except Exception:
+            # same rule as the unbatched path: a crashed executor never
+            # returns to a pool; the dispatcher's retry re-dispatches the
+            # WHOLE batch (every member exactly once per attempt)
+            ex.exit()
+            self.residency.add_residency(ex.nbytes, ex.resident_seconds,
+                                         ex.busy_seconds)
+            raise
+        driver.finish(dep, ex)
+        if ex.params is None and ex.driver not in ("process",):
+            self.residency.add_residency(ex.nbytes, ex.resident_seconds,
+                                         ex.busy_seconds)
+        host.check_alive()
+        tl.t_done = now()
+        tl.batch_size = batch.n_requests
+        base_label = label or f"{dep.name}:{driver_name}"
+        for i, t_enq in enumerate(batch.enqueue_times):
+            member_label = batch.labels[i] or base_label
+            self.recorder.add(member_label,
+                              tl.for_member(t_enq, batch.n_requests))
+        return out

@@ -66,9 +66,13 @@ class BootCancelled(RuntimeError):
 class BootContext:
     """Mutable scratch space a plan's stages fill in as the boot progresses."""
 
-    def __init__(self, dep, driver_name: str) -> None:
+    def __init__(self, dep, driver_name: str,
+                 bucket_rows: Optional[int] = None) -> None:
         self.dep = dep
         self.driver_name = driver_name
+        # coalesced batches boot a program compiled for this many token rows
+        # (None = the deployment's base request shape)
+        self.bucket_rows = bucket_rows
         self.program_payload: Optional[bytes] = None
         self.program: Optional[Callable] = None
         self.host_params: Any = None
@@ -100,9 +104,9 @@ class FetchProgram(Stage):
     track = TRACK_PROGRAM
 
     def run(self, ctx: BootContext) -> None:
-        payload = ctx.dep.fetch_program_payload()
+        payload = ctx.dep.fetch_program_payload(ctx.bucket_rows)
         if payload is None:                    # deploy-verified in-process fallback
-            ctx.program = ctx.dep.fallback_program
+            ctx.program = ctx.dep.load_program(ctx.bucket_rows)
         else:
             ctx.program_payload = payload
 
@@ -129,7 +133,8 @@ class TraceCompile(Stage):
     def run(self, ctx: BootContext) -> None:
         dep = ctx.dep
         fresh = jax.jit(lambda p, t: dep.serve_fn(p, t))   # fresh identity => re-trace
-        ctx.program = fresh.lower(dep.abstract_params, dep.abstract_tokens).compile()
+        ctx.program = fresh.lower(dep.abstract_params,
+                                  dep.abstract_tokens_for(ctx.bucket_rows)).compile()
 
 
 class RestoreWeightsHost(Stage):
@@ -407,19 +412,23 @@ class BootHandle:
 class BootEngine:
     """Executes BootPlans: concurrent tracks, per-stage timing, cancellation."""
 
-    def execute(self, plan: BootPlan, dep, tl: Timeline, driver_name: str) -> Executor:
+    def execute(self, plan: BootPlan, dep, tl: Timeline, driver_name: str,
+                bucket_rows: Optional[int] = None) -> Executor:
         """Synchronous boot: run the plan, stamp ``tl``, return the executor."""
-        result = self._run(plan, dep, driver_name, cancel=None)
+        result = self._run(plan, dep, driver_name, cancel=None,
+                           bucket_rows=bucket_rows)
         tl.record_boot(result.stage_s, result.wall_s)
         return result.executor
 
-    def launch(self, plan: BootPlan, dep, driver_name: str) -> BootHandle:
+    def launch(self, plan: BootPlan, dep, driver_name: str,
+               bucket_rows: Optional[int] = None) -> BootHandle:
         """Speculative pre-boot: run the plan on a background thread."""
         handle = BootHandle(dep, driver_name)
 
         def run() -> None:
             try:
-                result = self._run(plan, dep, driver_name, cancel=handle._cancel)
+                result = self._run(plan, dep, driver_name, cancel=handle._cancel,
+                                   bucket_rows=bucket_rows)
             except BaseException as e:  # noqa: BLE001 - relayed via claim()
                 handle._finish(None, e)
             else:
@@ -430,8 +439,9 @@ class BootEngine:
 
     # ------------------------------------------------------------- internal
     def _run(self, plan: BootPlan, dep, driver_name: str,
-             cancel: Optional[threading.Event]) -> BootResult:
-        ctx = BootContext(dep, driver_name)
+             cancel: Optional[threading.Event],
+             bucket_rows: Optional[int] = None) -> BootResult:
+        ctx = BootContext(dep, driver_name, bucket_rows=bucket_rows)
         stage_s: Dict[str, float] = {}
         timing_lock = threading.Lock()
         errors: List[BaseException] = []

@@ -12,7 +12,8 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+import threading
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -65,24 +66,83 @@ class Deployment:
     fallback_program: Any = None   # set when deploy-time verification rejects the
                                    # serialized blob (XLA:CPU AOT loader can refuse
                                    # executables on feature-mismatched hosts)
+    # shape-bucket program registry (repro.core.batching): token-row count ->
+    # in-process fallback program, or None when the serialized image is good.
+    _buckets: Dict[int, Any] = dataclasses.field(default_factory=dict, repr=False)
+    _bucket_lock: Any = dataclasses.field(default_factory=threading.Lock, repr=False)
 
     @property
     def name(self) -> str:
         return self.spec.name
 
-    def load_program(self) -> Callable:
+    @property
+    def base_rows(self) -> int:
+        """Token rows of the unbatched request shape (the deploy-time program)."""
+        return self.spec.batch_size
+
+    def bucket_image_key(self, rows: int) -> str:
+        return f"{self.image.key}-b{rows}"
+
+    def abstract_tokens_for(self, rows: Optional[int]) -> jax.ShapeDtypeStruct:
+        if rows is None or rows == self.base_rows:
+            return self.abstract_tokens
+        return jax.ShapeDtypeStruct((rows, self.spec.prompt_len), jnp.int32)
+
+    def ensure_bucket(self, rows: int) -> None:
+        """Compile + serialize the serve program for a coalesced batch shape.
+
+        One compile per bucket, ever — every subsequent batch rounded to this
+        bucket boots the cached image exactly like the base program. If the
+        host's AOT loader rejects serialized blobs (see ``fallback_program``),
+        the in-process compiled program is kept instead.
+        """
+        if rows == self.base_rows:
+            return
+        with self._bucket_lock:
+            if rows in self._buckets:
+                return
+            bucketed = jax.jit(self.serve_fn).lower(
+                self.abstract_params, self.abstract_tokens_for(rows)).compile()
+            fallback = bucketed
+            if self.fallback_program is None:
+                bkey = self.bucket_image_key(rows)
+                try:
+                    self.cache.put_compiled(bkey, bucketed)
+                    self.cache.load_program(bkey)      # verify it deserializes
+                    fallback = None
+                except Exception:
+                    fallback = bucketed
+            self._buckets[rows] = fallback
+
+    def load_program(self, bucket_rows: Optional[int] = None) -> Callable:
         """The unikernel 'boot': deserialize from the image registry, or serve the
         deploy-verified in-process program if this host rejected the blob."""
-        if self.fallback_program is not None:
-            return self.fallback_program
-        return self.cache.load_program(self.image.key)
+        fallback = self._program_fallback(bucket_rows)
+        if fallback is not None:
+            return fallback
+        return self.cache.load_program(self._program_key(bucket_rows))
 
-    def fetch_program_payload(self) -> Optional[bytes]:
+    def fetch_program_payload(self, bucket_rows: Optional[int] = None) -> Optional[bytes]:
         """Serialized-program bytes for the boot pipeline's FetchProgram stage,
         or None when this host degraded to the in-process fallback program."""
-        if self.fallback_program is not None:
+        if self._program_fallback(bucket_rows) is not None:
             return None
-        return self.cache.read_program_bytes(self.image.key)
+        return self.cache.read_program_bytes(self._program_key(bucket_rows))
+
+    def _program_key(self, bucket_rows: Optional[int]) -> str:
+        if bucket_rows is None or bucket_rows == self.base_rows:
+            return self.image.key
+        return self.bucket_image_key(bucket_rows)
+
+    def _program_fallback(self, bucket_rows: Optional[int]) -> Optional[Callable]:
+        if bucket_rows is None or bucket_rows == self.base_rows:
+            return self.fallback_program
+        with self._bucket_lock:
+            if bucket_rows not in self._buckets:
+                raise KeyError(
+                    f"bucket {bucket_rows} not built for {self.name}; "
+                    "call Deployment.ensure_bucket first")
+            return self._buckets[bucket_rows]
 
     def example_tokens(self, seed: int = 0) -> np.ndarray:
         rng = np.random.default_rng(seed)

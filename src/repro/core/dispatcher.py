@@ -5,11 +5,15 @@ table and no per-function load monitor — any alive host can take any request, 
 routing is just least-loaded. What remains is what any large fleet needs:
 
 * retry: HostFailure -> re-dispatch to another host (stateless executors make this
-  always-safe);
+  always-safe); a coalesced batch retries as ONE unit, so every member request is
+  re-dispatched exactly once per attempt;
 * hedging: if an attempt exceeds ``hedge_factor`` x the observed p95 latency for
   that (function, driver), launch a backup on a different host and take the first
   result — the tail-at-scale twin of the paper's overload observation (Fig 1/2:
-  start latency blows up past the core count);
+  start latency blows up past the core count). Hedge deadlines live on ONE shared
+  timer thread (a heap of deadlines), not one parked thread per in-flight request,
+  and the p95 comes from an O(1) streaming P-square estimator, not a percentile
+  over a sample window under a lock;
 * speculative pre-boot: with ``speculative=True`` the dispatcher starts the
   executor boot (via the agent's BootEngine handle) the moment a host is picked
   — while the request may still be waiting for a slot — and cancels it cleanly
@@ -18,49 +22,45 @@ routing is just least-loaded. What remains is what any large fleet needs:
 from __future__ import annotations
 
 import threading
-from concurrent.futures import Future, InvalidStateError
-from typing import Dict, List, Optional
-
-import numpy as np
+from concurrent.futures import Future
+from typing import Dict, Optional
 
 from repro.core.agent import Agent
+from repro.core.batching import CoalescedBatch, settle_quietly as _settle
 from repro.core.cluster import Cluster, HostFailure
 from repro.core.deploy import Deployment
-from repro.core.metrics import Timeline, now
+from repro.core.metrics import P2Quantile, Timeline, now
+from repro.core.timerwheel import DeadlineTimer
 
 
 class _LatencyModel:
-    """Streaming per-(fn, driver) latency quantile estimate for hedge deadlines."""
+    """Streaming per-(fn, driver) latency quantile estimate for hedge deadlines.
 
-    def __init__(self, window: int = 256) -> None:
-        self._samples: Dict[str, List[float]] = {}
+    One P-square estimator per key: O(1) memory and O(1) per observation. This
+    runs on EVERY submit and every hedge check — the previous spelling (a full
+    ``np.percentile`` over a 256-sample window under a global lock) made the
+    latency model itself a hot-path serialization point.
+    """
+
+    def __init__(self, min_samples: int = 8, p: float = 0.95) -> None:
+        self._est: Dict[str, P2Quantile] = {}
         self._lock = threading.Lock()
-        self.window = window
+        self.min_samples = min_samples
+        self.p = p
 
     def observe(self, key: str, seconds: float) -> None:
         with self._lock:
-            buf = self._samples.setdefault(key, [])
-            buf.append(seconds)
-            if len(buf) > self.window:
-                del buf[: len(buf) - self.window]
+            est = self._est.get(key)
+            if est is None:
+                est = self._est[key] = P2Quantile(self.p)
+            est.observe(seconds)
 
     def p95(self, key: str) -> Optional[float]:
         with self._lock:
-            buf = self._samples.get(key)
-            if not buf or len(buf) < 8:
+            est = self._est.get(key)
+            if est is None or est.n < self.min_samples:
                 return None
-            return float(np.percentile(buf, 95))
-
-
-def _settle(result: Future, value=None, error: Optional[BaseException] = None) -> None:
-    """Complete ``result`` unless a concurrent attempt (hedge / retry) won."""
-    try:
-        if error is not None:
-            result.set_exception(error)
-        else:
-            result.set_result(value)
-    except InvalidStateError:
-        pass
+            return float(est.value)
 
 
 def _is_transient(err: BaseException) -> bool:
@@ -86,6 +86,7 @@ class Dispatcher:
         self.preboots_launched = 0
         self.retries = 0
         self._lock = threading.Lock()
+        self._hedge_timer = DeadlineTimer("dispatcher-hedge-timer")
 
     # ------------------------------------------------------------------ public
     def submit(self, dep: Optional[Deployment], tokens, driver_name: str,
@@ -99,15 +100,39 @@ class Dispatcher:
                       label=label, allow_hedge=self.hedging, speculative=spec)
         return result
 
+    def submit_batch(self, dep: Deployment, batch: CoalescedBatch,
+                     driver_name: str, label: Optional[str] = None,
+                     speculative: Optional[bool] = None) -> Future:
+        """Dispatch one coalesced batch as a single unit.
+
+        The batch rides the exact retry/hedge machinery of ``submit`` — a
+        transient failure re-dispatches the whole batch (every member exactly
+        once per attempt), a straggling batch gets one hedged backup — and the
+        Future resolves to the stacked result rows; the coalescer fans them
+        back out to the per-request Futures.
+        """
+        result: Future = Future()
+        tl = Timeline(t_enqueue=batch.t_earliest)
+        spec = self.speculative if speculative is None else speculative
+        self._attempt(result, dep, batch, driver_name, tl, tried=set(), n_try=0,
+                      label=label, allow_hedge=self.hedging, speculative=spec)
+        return result
+
+    def close(self) -> None:
+        """Stop the shared hedge-timer thread (gateway shutdown)."""
+        self._hedge_timer.close()
+
     # ---------------------------------------------------------------- internal
-    def _preboot(self, host, dep, driver_name: str):
+    def _preboot(self, host, dep, driver_name: str,
+                 bucket_rows: Optional[int] = None):
         """Start a speculative boot for a request headed to ``host``, if the
         agent and driver support it. Never raises — speculation is best-effort."""
         pre_fn = getattr(self.agent, "preboot", None)
         if pre_fn is None:
             return None
         try:
-            handle = pre_fn(host, dep, driver_name)
+            handle = pre_fn(host, dep, driver_name, bucket_rows=bucket_rows) \
+                if bucket_rows is not None else pre_fn(host, dep, driver_name)
         except Exception:
             return None
         if handle is not None:
@@ -118,7 +143,10 @@ class Dispatcher:
     def _attempt(self, result: Future, dep, tokens, driver_name: str, tl: Timeline,
                  tried: set, n_try: int, label, allow_hedge: bool,
                  speculative: bool = False) -> None:
+        batch = tokens if isinstance(tokens, CoalescedBatch) else None
         key = f"{dep.name if dep else 'noop'}:{driver_name}"
+        if batch is not None:
+            key += f":b{batch.bucket}"      # service time scales with the bucket
         try:
             host = self.cluster.pick_host(exclude=tried)
         except HostFailure as e:
@@ -128,14 +156,19 @@ class Dispatcher:
 
         preboot = None
         if speculative and dep is not None:
-            preboot = self._preboot(host, dep, driver_name)
+            preboot = self._preboot(
+                host, dep, driver_name,
+                bucket_rows=batch.padded_rows if batch is not None else None)
             if preboot is not None:
                 # whichever attempt settles the request first, an unclaimed
                 # speculative boot must die with its executor
                 result.add_done_callback(lambda _f: preboot.cancel())
 
         def work():
-            if preboot is None:
+            if batch is not None:
+                out = self.agent.handle_batch(host, dep, batch, driver_name, tl,
+                                              label, preboot=preboot)
+            elif preboot is None:
                 out = self.agent.handle(host, dep, tokens, driver_name, tl, label)
             else:
                 out = self.agent.handle(host, dep, tokens, driver_name, tl, label,
@@ -166,16 +199,13 @@ class Dispatcher:
 
         fut.add_done_callback(on_done)
 
-        # straggler hedging: one backup if this attempt exceeds hedged deadline
+        # straggler hedging: one backup if this attempt exceeds hedged deadline.
+        # The deadline sits on the shared timer thread; the attempt/result done
+        # callbacks cancel it, so a settled request costs nothing further.
         p95 = self.latency.p95(key)
         if allow_hedge and p95 is not None and len(self.cluster.alive_hosts()) > 1:
-            deadline = self.hedge_factor * p95
-            settled = threading.Event()           # fires on attempt OR request end
-            fut.add_done_callback(lambda _f: settled.set())
-            result.add_done_callback(lambda _f: settled.set())
 
-            def hedge_watch():
-                settled.wait(deadline)
+            def fire_hedge() -> None:
                 if result.done() or fut.done():
                     return          # finished / failed (retry path owns failures)
                 with self._lock:
@@ -184,4 +214,6 @@ class Dispatcher:
                 self._attempt(result, dep, tokens, driver_name, fresh, tried,
                               n_try + 1, label, allow_hedge=False)
 
-            threading.Thread(target=hedge_watch, daemon=True).start()
+            entry = self._hedge_timer.schedule(self.hedge_factor * p95, fire_hedge)
+            fut.add_done_callback(lambda _f: entry.cancel())
+            result.add_done_callback(lambda _f: entry.cancel())

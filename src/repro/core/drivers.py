@@ -52,14 +52,24 @@ class Driver:
     # drivers whose boots are pure (no pool/donor state mutated before the
     # executor is claimed) may be started speculatively by the dispatcher
     supports_preboot: bool = False
+    # drivers whose boot can target a coalesced batch shape (the coalescer in
+    # repro.core.batching routes through these); pool/donor drivers hold
+    # executors compiled for the base shape, so they stay unbatched
+    supports_batch: bool = False
+    # batch-capable drivers that boot from a serialized AOT image need the
+    # bucket program built into the registry first (Deployment.ensure_bucket);
+    # re-tracing drivers compile the bucket shape themselves
+    needs_bucket_image: bool = False
 
     def plan(self, dep: Deployment) -> BootPlan:
         """Declare this driver's start path as a BootPlan."""
         raise NotImplementedError
 
-    def start(self, dep: Deployment, tl: Timeline) -> Executor:
+    def start(self, dep: Deployment, tl: Timeline,
+              bucket_rows: Optional[int] = None) -> Executor:
         """The ONE start body shared by every driver: execute the declaration."""
-        return self.engine.execute(self.plan(dep), dep, tl, driver_name=self.name)
+        return self.engine.execute(self.plan(dep), dep, tl, driver_name=self.name,
+                                   bucket_rows=bucket_rows)
 
     def finish(self, dep: Deployment, ex: Executor) -> None:
         """Post-request lifecycle. Cold drivers exit; pool drivers return."""
@@ -72,6 +82,8 @@ class UnikernelDriver(Driver):
 
     name = "unikernel"
     supports_preboot = True
+    supports_batch = True
+    needs_bucket_image = True
 
     def plan(self, dep: Deployment) -> BootPlan:
         return BootPlan([
@@ -231,6 +243,7 @@ class ColdJITDriver(Driver):
 
     name = "cold_jit"
     supports_preboot = True
+    supports_batch = True          # TraceCompile re-traces at the bucket shape
 
     def plan(self, dep: Deployment) -> BootPlan:
         return BootPlan([

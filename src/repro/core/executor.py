@@ -29,9 +29,25 @@ class ExecutorState(enum.Enum):
     EXITED = "exited"
 
 
-def tree_nbytes(tree) -> int:
-    return int(sum(np.prod(x.shape) * jax.dtypes.canonicalize_dtype(x.dtype).itemsize
-                   for x in jax.tree.leaves(tree)))
+# Every executor for a given image carries an identical param tree, but on a
+# cold-only platform an Executor is created per request — re-walking the whole
+# pytree each time is pure hot-path overhead. Memoize per image_key.
+_NBYTES_CACHE: dict = {}
+_NBYTES_LOCK = threading.Lock()
+
+
+def tree_nbytes(tree, cache_key: Optional[str] = None) -> int:
+    if cache_key is not None:
+        with _NBYTES_LOCK:
+            cached = _NBYTES_CACHE.get(cache_key)
+        if cached is not None:
+            return cached
+    total = int(sum(np.prod(x.shape) * jax.dtypes.canonicalize_dtype(x.dtype).itemsize
+                    for x in jax.tree.leaves(tree)))
+    if cache_key is not None:
+        with _NBYTES_LOCK:
+            _NBYTES_CACHE[cache_key] = total
+    return total
 
 
 class Executor:
@@ -50,7 +66,7 @@ class Executor:
         self.program = program
         self.params = params
         self.shared_weights = shared_weights     # fork: weights aliased from a donor
-        self.nbytes = 0 if shared_weights else tree_nbytes(params)
+        self.nbytes = 0 if shared_weights else tree_nbytes(params, cache_key=image_key)
         self.state = ExecutorState.READY
         self.t_created = now()
         self.t_exited: Optional[float] = None
@@ -72,6 +88,20 @@ class Executor:
                 self.busy_seconds += now() - t0
                 if self.state is ExecutorState.RUNNING:
                     self.state = ExecutorState.READY
+        return out
+
+    def run_batch(self, tokens, valid_rows: Optional[int] = None) -> np.ndarray:
+        """Run a padded coalesced batch and drop the padding rows.
+
+        The executor's program was compiled for the batch's bucket shape; the
+        caller stacked ``valid_rows`` real request rows and padded the rest.
+        The padding mask is the row slice ``[:valid_rows]`` — batch rows are
+        independent (attention is within-sequence), so padding rows cannot
+        contaminate real ones and are simply discarded here.
+        """
+        out = np.asarray(self.run(tokens))
+        if valid_rows is not None:
+            out = out[:valid_rows]
         return out
 
     # -------------------------------------------------------------- lifecycle

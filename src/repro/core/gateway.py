@@ -15,13 +15,14 @@ import tempfile
 import threading
 from concurrent.futures import Future
 from pathlib import Path
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
 from repro.core.agent import Agent
 from repro.core.artifact import FunctionSpec
 from repro.core.autoscaler import ColdOnlyScaler, WarmPoolAutoscaler
+from repro.core.batching import BatchingConfig, Coalescer
 from repro.core.cluster import Cluster
 from repro.core.compile_cache import CompileCache
 from repro.core.deploy import Deployment, deploy
@@ -33,7 +34,8 @@ from repro.core.snapshot import SnapshotStore
 class Gateway:
     def __init__(self, *, n_hosts: int = 1, slots_per_host: int = 4,
                  mode: str = "cold", work_dir: Optional[str] = None,
-                 hedging: bool = True, speculative: bool = False) -> None:
+                 hedging: bool = True, speculative: bool = False,
+                 batching: Union[bool, BatchingConfig] = False) -> None:
         assert mode in ("cold", "warm")
         self.mode = mode
         self.work_dir = work_dir or tempfile.mkdtemp(prefix="repro_faas_")
@@ -47,6 +49,10 @@ class Gateway:
         self.agent = Agent(self.recorder, self.residency)
         self.dispatcher = Dispatcher(self.cluster, self.agent, hedging=hedging,
                                      speculative=speculative)
+        self.coalescer: Optional[Coalescer] = None
+        if batching:
+            cfg = batching if isinstance(batching, BatchingConfig) else BatchingConfig()
+            self.coalescer = Coalescer(self.dispatcher, cfg)
         self.deployments: Dict[str, Deployment] = {}
         if mode == "warm":
             self.scaler = WarmPoolAutoscaler(self.cluster, self.deployments)
@@ -57,8 +63,20 @@ class Gateway:
 
     # ------------------------------------------------------------------ deploy
     def deploy(self, spec: FunctionSpec) -> Deployment:
-        """Build the ExecutorImage (the `fn deploy` + IncludeOS `boot` step)."""
+        """Build the ExecutorImage (the `fn deploy` + IncludeOS `boot` step).
+
+        With coalescing enabled the bucket images are built here too — shape
+        buckets are deploy-time artifacts exactly like the base image, so no
+        request ever pays a compile on the serve path.
+        """
         dep = deploy(spec, self.cache, self.snapshots, self.work_dir)
+        default = self.cluster.hosts[0].drivers.get(self.default_driver())
+        if self.coalescer is not None and default is not None \
+                and default.supports_batch:
+            # skip in warm mode: the default driver never coalesces there, and
+            # a batch-capable driver invoked explicitly builds buckets lazily
+            for bucket in self.coalescer.cfg.buckets:
+                dep.ensure_bucket(bucket * spec.batch_size)
         with self._lock:
             self.deployments[spec.name] = dep
         return dep
@@ -75,6 +93,13 @@ class Gateway:
         self.scaler.observe_arrival(fn_name)
         if tokens is None:
             tokens = dep.example_tokens()
+        if self.coalescer is not None:
+            drv = self.cluster.hosts[0].drivers.get(driver)
+            if drv is not None and drv.supports_batch:
+                return self.coalescer.submit(
+                    dep, tokens, driver, label=label,
+                    needs_bucket_image=drv.needs_bucket_image,
+                    speculative=speculative)
         return self.dispatcher.submit(dep, tokens, driver, label=label,
                                       speculative=speculative)
 
@@ -83,6 +108,18 @@ class Gateway:
                timeout: float = 600.0, speculative: Optional[bool] = None):
         return self.invoke_async(fn_name, tokens, driver, label,
                                  speculative=speculative).result(timeout)
+
+    def invoke_many(self, fn_name: str,
+                    tokens_list: Sequence[Optional[np.ndarray]],
+                    driver: Optional[str] = None, label: Optional[str] = None,
+                    timeout: float = 600.0) -> List[np.ndarray]:
+        """Submit many requests at once and gather the results in order.
+
+        With ``batching`` enabled this is the coalescer's best case: the whole
+        burst lands in one window and shares a handful of executor boots.
+        """
+        futs = [self.invoke_async(fn_name, t, driver, label) for t in tokens_list]
+        return [np.asarray(f.result(timeout)) for f in futs]
 
     def noop(self, label: str = "noop", timeout: float = 60.0):
         """The paper's /noop URL: platform overhead with no function work."""
@@ -95,11 +132,23 @@ class Gateway:
     def residency_summary(self) -> Dict[str, float]:
         return self.residency.summary()
 
+    def batching_summary(self) -> Optional[Dict[str, float]]:
+        """Coalescing health: batches/requests, boots-per-request, queue delay."""
+        if self.coalescer is None:
+            return None
+        return self.coalescer.summary()
+
     def _account_exit(self, ex) -> None:
         self.residency.add_residency(ex.nbytes, ex.resident_seconds, ex.busy_seconds)
 
     # ---------------------------------------------------------------- shutdown
     def shutdown(self) -> None:
+        if self.coalescer is not None:
+            # flush any requests still collecting in coalescing windows and
+            # wait for in-flight batches — no Future may be left dangling
+            self.coalescer.drain()
+            self.coalescer.close()
+        self.dispatcher.close()         # shared hedge-timer thread
         self.scaler.stop()
         for host in self.cluster.hosts:
             # flush warm pools so their residency lands in the tracker (via on_exit)

@@ -18,13 +18,14 @@ import numpy as np
 
 @dataclasses.dataclass
 class LatencyStats:
-    """Paper-style summary: median + quartiles + p1/p99 whiskers."""
+    """Paper-style summary: median + quartiles + p1/p99 whiskers (+p95 for load)."""
 
     n: int
     p1: float
     p25: float
     p50: float
     p75: float
+    p95: float
     p99: float
     mean: float
 
@@ -32,14 +33,122 @@ class LatencyStats:
     def from_samples(cls, samples_s: List[float]) -> "LatencyStats":
         a = np.asarray(samples_s, dtype=np.float64) * 1e3  # report in ms like the paper
         if a.size == 0:
-            return cls(0, *([float("nan")] * 6))
-        q = np.percentile(a, [1, 25, 50, 75, 99])
+            return cls(0, *([float("nan")] * 7))
+        q = np.percentile(a, [1, 25, 50, 75, 95, 99])
         return cls(int(a.size), float(q[0]), float(q[1]), float(q[2]), float(q[3]),
-                   float(q[4]), float(a.mean()))
+                   float(q[4]), float(q[5]), float(a.mean()))
 
     def row(self) -> str:
         return (f"n={self.n:5d}  p1={self.p1:9.3f}  p25={self.p25:9.3f}  "
-                f"p50={self.p50:9.3f}  p75={self.p75:9.3f}  p99={self.p99:9.3f} ms")
+                f"p50={self.p50:9.3f}  p75={self.p75:9.3f}  p95={self.p95:9.3f}  "
+                f"p99={self.p99:9.3f} ms")
+
+
+class P2Quantile:
+    """Jain & Chlamtac's P-square streaming quantile estimator.
+
+    O(1) memory and O(1) per observation — five markers track the target
+    quantile without retaining the sample window, so a per-request hot path
+    (the dispatcher's hedge-deadline check) never sorts or percentiles a
+    buffer under a lock.
+    """
+
+    def __init__(self, p: float = 0.95) -> None:
+        assert 0.0 < p < 1.0
+        self.p = p
+        self.n = 0
+        self._init: List[float] = []          # first five observations
+        self._q: List[float] = []             # marker heights
+        self._pos: List[float] = []           # marker positions (1-based)
+        self._want: List[float] = []          # desired positions
+        self._dn = [0.0, p / 2, p, (1 + p) / 2, 1.0]
+
+    def observe(self, x: float) -> None:
+        self.n += 1
+        if not self._q:
+            self._init.append(float(x))
+            if len(self._init) == 5:
+                self._init.sort()
+                self._q = list(self._init)
+                self._pos = [1.0, 2.0, 3.0, 4.0, 5.0]
+                p = self.p
+                self._want = [1.0, 1 + 2 * p, 1 + 4 * p, 3 + 2 * p, 5.0]
+            return
+        q, pos = self._q, self._pos
+        if x < q[0]:
+            q[0] = x
+            k = 0
+        elif x >= q[4]:
+            q[4] = x
+            k = 3
+        else:
+            k = next(i - 1 for i in range(1, 5) if x < q[i])
+        for i in range(k + 1, 5):
+            pos[i] += 1
+        for i in range(5):
+            self._want[i] += self._dn[i]
+        for i in (1, 2, 3):
+            d = self._want[i] - pos[i]
+            if (d >= 1 and pos[i + 1] - pos[i] > 1) or \
+                    (d <= -1 and pos[i - 1] - pos[i] < -1):
+                s = 1 if d >= 0 else -1
+                qn = self._parabolic(i, s)
+                if not (q[i - 1] < qn < q[i + 1]):
+                    qn = self._linear(i, s)
+                q[i] = qn
+                pos[i] += s
+
+    def _parabolic(self, i: int, s: int) -> float:
+        q, n = self._q, self._pos
+        return q[i] + s / (n[i + 1] - n[i - 1]) * (
+            (n[i] - n[i - 1] + s) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+            + (n[i + 1] - n[i] - s) * (q[i] - q[i - 1]) / (n[i] - n[i - 1]))
+
+    def _linear(self, i: int, s: int) -> float:
+        q, n = self._q, self._pos
+        return q[i] + s * (q[i + s] - q[i]) / (n[i + s] - n[i])
+
+    @property
+    def value(self) -> float:
+        """Current quantile estimate (exact percentile while n < 5)."""
+        if self._q:
+            return self._q[2]
+        if not self._init:
+            return float("nan")
+        return float(np.percentile(self._init, self.p * 100))
+
+
+class Series:
+    """Thread-safe stream of scalar samples with count/mean/summary queries.
+
+    The batching layer uses these for its batch-size / queue-delay /
+    boots-per-request series without dragging a Recorder (which is keyed by
+    Timeline fields) into non-latency measurements.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._samples: List[float] = []
+
+    def add(self, value: float) -> None:
+        with self._lock:
+            self._samples.append(float(value))
+
+    @property
+    def count(self) -> int:
+        with self._lock:
+            return len(self._samples)
+
+    @property
+    def mean(self) -> float:
+        with self._lock:
+            if not self._samples:
+                return float("nan")
+            return float(np.mean(self._samples))
+
+    def stats(self) -> LatencyStats:
+        with self._lock:
+            return LatencyStats.from_samples(self._samples)
 
 
 # boot-stage -> coarse bucket, for the paper-style two-column summary:
@@ -66,6 +175,10 @@ class Timeline:
     stage_s: Dict[str, float] = dataclasses.field(default_factory=dict)
     t_boot_wall: float = 0.0
     preboot: bool = False            # boot ran speculatively while queued
+    # coalescing: how many requests shared this executor's boot (1 = unbatched).
+    # Member timelines of one batch share every stamp except t_enqueue, so
+    # queue_wait stays per-request while startup/execution are the batch's.
+    batch_size: int = 1
 
     def record_boot(self, stage_s: Dict[str, float], wall_s: float) -> None:
         self.stage_s.update(stage_s)
@@ -85,6 +198,18 @@ class Timeline:
     def boot_overlap_saved(self) -> float:
         """Seconds saved by running boot stages concurrently (>= 0)."""
         return max(0.0, sum(self.stage_s.values()) - self.t_boot_wall)
+
+    def for_member(self, t_enqueue: float, batch_size: int) -> "Timeline":
+        """A member-request view of a batch timeline: own enqueue stamp (so
+        queue-delay includes the coalescing window), shared boot/exec stamps."""
+        member = dataclasses.replace(self, t_enqueue=t_enqueue,
+                                     batch_size=batch_size)
+        return member
+
+    @property
+    def boots_share(self) -> float:
+        """This request's share of one executor boot (1/batch_size)."""
+        return 1.0 / max(self.batch_size, 1)
 
     @property
     def queue_wait(self) -> float:

@@ -1,0 +1,99 @@
+"""One shared deadline thread replacing thread-per-deadline watchers.
+
+Both the dispatcher's hedge deadlines and the coalescer's flush windows need
+"run this callback at time T unless cancelled first". The naive spelling —
+one parked thread per deadline — means 10k in-flight requests hold 10k
+threads doing nothing but waiting. ``DeadlineTimer`` keeps a single daemon
+thread over a heap of deadlines instead: schedule/cancel are O(log n) under
+one lock, and cancelled entries are simply skipped when they surface.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+from typing import Callable, List, Tuple
+
+from repro.core.metrics import now
+
+
+class TimerEntry:
+    """A scheduled callback; ``cancel()`` makes the timer skip it."""
+
+    __slots__ = ("deadline", "seq", "fn", "cancelled")
+
+    def __init__(self, deadline: float, seq: int, fn: Callable[[], None]) -> None:
+        self.deadline = deadline
+        self.seq = seq
+        self.fn = fn
+        self.cancelled = False
+
+    def cancel(self) -> None:
+        # flag only: the entry stays in the heap until its deadline surfaces,
+        # which is fine — deadlines are short and the tuple is tiny
+        self.cancelled = True
+
+
+class DeadlineTimer:
+    def __init__(self, name: str = "deadline-timer") -> None:
+        self.name = name
+        self._heap: List[Tuple[float, int, TimerEntry]] = []
+        self._cond = threading.Condition()
+        self._seq = itertools.count()
+        self._thread: threading.Thread | None = None
+        self._closed = False
+
+    def schedule(self, delay_s: float, fn: Callable[[], None]) -> TimerEntry:
+        """Run ``fn`` on the timer thread after ``delay_s`` unless cancelled.
+
+        Callbacks must be quick (enqueue work elsewhere) — they share the one
+        thread with every other deadline. After ``close()`` the returned entry
+        is already cancelled and will never fire.
+        """
+        entry = TimerEntry(now() + delay_s, next(self._seq), fn)
+        with self._cond:
+            if self._closed:
+                entry.cancelled = True
+                return entry
+            heapq.heappush(self._heap, (entry.deadline, entry.seq, entry))
+            if self._thread is None:
+                self._thread = threading.Thread(target=self._loop, daemon=True,
+                                                name=self.name)
+                self._thread.start()
+            self._cond.notify()
+        return entry
+
+    def close(self) -> None:
+        """Stop the timer thread; pending entries are dropped (shutdown path)."""
+        with self._cond:
+            self._closed = True
+            for _, _, entry in self._heap:
+                entry.cancelled = True
+            self._heap.clear()
+            self._cond.notify()
+
+    def pending(self) -> int:
+        with self._cond:
+            return sum(1 for _, _, e in self._heap if not e.cancelled)
+
+    # ------------------------------------------------------------- internal
+    def _loop(self) -> None:
+        while True:
+            with self._cond:
+                while True:
+                    if self._closed:
+                        return
+                    if not self._heap:
+                        self._cond.wait()
+                        continue
+                    delay = self._heap[0][0] - now()
+                    if delay <= 0:
+                        _, _, entry = heapq.heappop(self._heap)
+                        break
+                    self._cond.wait(delay)
+            if entry.cancelled:
+                continue
+            try:
+                entry.fn()
+            except Exception:   # a bad callback must not kill the shared thread
+                pass

@@ -1,0 +1,324 @@
+"""Coalescing layer: fan-out correctness, padding equivalence, whole-batch
+retry, drain-on-shutdown, adaptive window, and the hot-path satellites
+(P-square quantiles, tree_nbytes memoization, run_batch padding mask)."""
+import threading
+import types
+
+import numpy as np
+import pytest
+
+from repro.core.batching import BatchingConfig, CoalescedBatch, Coalescer, _FnQueue
+from repro.core.cluster import Cluster, HostFailure
+from repro.core.dispatcher import Dispatcher
+from repro.core.metrics import P2Quantile, now
+
+
+@pytest.fixture(scope="module")
+def bgateway():
+    """Cold-mode platform with coalescing on and a window wide enough that a
+    tight submit burst always lands in one batch (keeps assertions timing-safe)."""
+    from repro.core import FunctionSpec, Gateway
+    cfg = BatchingConfig(min_window_s=0.02)
+    gw = Gateway(n_hosts=2, slots_per_host=2, mode="cold", hedging=False,
+                 batching=cfg)
+    spec = FunctionSpec(arch="llama3.2-3b", batch_size=2, prompt_len=16,
+                        decode_steps=2)
+    gw.deploy(spec)
+    yield gw, spec
+    gw.shutdown()
+
+
+def _fake_dep(batch_size=2, prompt_len=4, name="fn"):
+    return types.SimpleNamespace(
+        name=name, base_rows=batch_size,
+        spec=types.SimpleNamespace(batch_size=batch_size, prompt_len=prompt_len),
+        ensure_bucket=lambda rows: None)
+
+
+# ---------------------------------------------------------------- integration
+
+def test_fan_out_correctness_mixed_batch_sizes(bgateway):
+    """Bursts of different sizes coalesce into different buckets; every request
+    gets back exactly what the unbatched program produces for ITS tokens."""
+    gw, spec = bgateway
+    dep = gw.deployments[spec.name]
+    seed = 0
+    for burst in (5, 2, 1):
+        toks = [dep.example_tokens(seed=seed + i) for i in range(burst)]
+        seed += burst
+        outs = gw.invoke_many(spec.name, toks, label=f"mixed:{burst}")
+        refs = [np.asarray(gw.dispatcher.submit(dep, t, "unikernel",
+                                                label="mixed:ref").result(120))
+                for t in toks]
+        for out, ref in zip(outs, refs):
+            assert out.shape == (spec.batch_size, spec.decode_steps)
+            np.testing.assert_array_equal(out, ref)   # batched == unbatched
+    summary = gw.batching_summary()
+    assert summary["requests"] >= 8
+    assert summary["boots_per_request"] < 1.0         # coalescing engaged
+    assert gw.coalescer.batch_sizes.count >= 1
+
+
+def test_coalesced_timelines_are_batch_aware(bgateway):
+    """One timeline per member request: shared boot stamps, own queue-delay."""
+    gw, spec = bgateway
+    dep = gw.deployments[spec.name]
+    toks = [dep.example_tokens(seed=100 + i) for i in range(4)]
+    gw.invoke_many(spec.name, toks, label="tl:batch")
+    tls = gw.recorder.timelines("tl:batch")
+    assert len(tls) == 4                              # one per request
+    coalesced = [t for t in tls if t.batch_size > 1]
+    assert coalesced                                  # burst actually batched
+    for t in coalesced:
+        assert t.queue_wait >= 0                      # own enqueue stamp
+        assert t.boots_share == pytest.approx(1.0 / t.batch_size)
+    # members of one batch share the boot: same stage dict, same boot wall
+    by_done = {}
+    for t in coalesced:
+        by_done.setdefault(t.t_done, []).append(t)
+    for members in by_done.values():
+        assert len({id(m.stage_s) for m in members}) == 1
+        assert len({m.t_boot_wall for m in members}) == 1
+
+
+def test_padding_mask_equivalence(bgateway):
+    """3 requests padded to the 4-bucket: padding rows are dropped and real
+    rows match the unbatched program exactly."""
+    gw, spec = bgateway
+    dep = gw.deployments[spec.name]
+    toks = [dep.example_tokens(seed=200 + i) for i in range(3)]
+    stacked = np.concatenate(toks, axis=0)            # (6, 16)
+    padded_rows = 4 * spec.batch_size                 # bucket 4 -> 8 rows
+    padded = np.concatenate(
+        [stacked, np.zeros((padded_rows - stacked.shape[0], stacked.shape[1]),
+                           stacked.dtype)], axis=0)
+    t0 = now()
+    batch = CoalescedBatch(tokens=padded, n_requests=3, bucket=4,
+                           rows_per_request=spec.batch_size,
+                           enqueue_times=[t0] * 3, labels=[None] * 3)
+    dep.ensure_bucket(padded_rows)
+    out = gw.dispatcher.submit_batch(dep, batch, "unikernel",
+                                     label="pad").result(300)
+    assert out.shape[0] == batch.valid_rows           # padding rows masked off
+    for i, t in enumerate(toks):
+        ref = np.asarray(gw.dispatcher.submit(dep, t, "unikernel",
+                                              label="pad:ref").result(120))
+        np.testing.assert_array_equal(out[batch.rows_of(i)], ref)
+
+
+def test_bucket_program_compiled_once_and_reused(bgateway):
+    gw, spec = bgateway
+    dep = gw.deployments[spec.name]
+    rows = 4 * spec.batch_size
+    dep.ensure_bucket(rows)
+    first = dep._buckets.get(rows, "missing")
+    dep.ensure_bucket(rows)                           # no recompile
+    assert dep._buckets.get(rows, "missing2") is first
+    # the bucket program is loadable through the same registry path as base
+    program = dep.load_program(bucket_rows=rows)
+    assert callable(program)
+
+
+def test_non_batchable_driver_bypasses_coalescer(bgateway):
+    gw, spec = bgateway
+    before = gw.coalescer.requests
+    out = gw.invoke(spec.name, driver="warm", label="bypass:warm")
+    assert out.shape == (spec.batch_size, spec.decode_steps)
+    assert gw.coalescer.requests == before            # warm pool stays unbatched
+
+
+def test_coalescer_drains_cleanly(bgateway):
+    """Requests still sitting in a (long) coalescing window complete on drain."""
+    gw, spec = bgateway
+    dep = gw.deployments[spec.name]
+    co = Coalescer(gw.dispatcher,
+                   BatchingConfig(min_window_s=30.0, max_window_s=60.0))
+    futs = [co.submit(dep, dep.example_tokens(seed=300 + i), "unikernel",
+                      label="drain") for i in range(3)]
+    assert not any(f.done() for f in futs)            # held by the 30s window
+    co.drain()
+    for f in futs:
+        assert np.asarray(f.result(1)).shape == (spec.batch_size,
+                                                 spec.decode_steps)
+
+
+def test_gateway_shutdown_drains_coalescer():
+    """Gateway.shutdown must flush the coalescer before tearing the cluster down."""
+    from repro.core import Gateway
+    gw = Gateway(n_hosts=1, slots_per_host=1, mode="cold", hedging=False,
+                 batching=True)
+    drained = []
+    gw.coalescer.drain = lambda *a, **k: drained.append(True)
+    gw.shutdown()
+    assert drained
+
+
+# ----------------------------------------------------------- dispatcher level
+
+def test_batch_retry_redispatches_all_members_exactly_once():
+    """A transient batch failure retries the WHOLE batch as one unit: every
+    member is re-dispatched exactly once, and every member future resolves."""
+    cluster = Cluster(n_hosts=2, slots_per_host=2)
+    calls = []
+    lock = threading.Lock()
+
+    class BatchAgent:
+        def handle_batch(self, host, dep, batch, driver_name, tl, label=None,
+                         preboot=None):
+            with lock:
+                calls.append(batch)
+                n = len(calls)
+            tl.t_dispatch = tl.t_dispatch or now()
+            if n == 1:
+                raise HostFailure("injected")
+            tl.t_done = now()
+            return batch.tokens[:batch.valid_rows] * 2
+
+    disp = Dispatcher(cluster, BatchAgent(), hedging=False)
+    co = Coalescer(disp, BatchingConfig(min_window_s=0.05, max_window_s=0.1))
+    dep = _fake_dep()
+    try:
+        futs = [co.submit(dep, np.full((2, 4), i, np.int32), "unikernel",
+                          needs_bucket_image=False) for i in range(3)]
+        outs = [np.asarray(f.result(10)) for f in futs]
+        assert len(calls) == 2                        # fail once, retry once
+        assert disp.retries == 1
+        for c in calls:
+            assert c.n_requests == 3                  # whole batch each attempt
+        for i, out in enumerate(outs):
+            np.testing.assert_array_equal(out, np.full((2, 4), 2 * i))
+        assert co.summary()["batches"] == 1.0         # one logical batch
+    finally:
+        cluster.shutdown()
+
+
+def test_batch_terminal_failure_fails_every_member():
+    cluster = Cluster(n_hosts=2, slots_per_host=2)
+
+    class BadAgent:
+        def handle_batch(self, host, dep, batch, driver_name, tl, label=None,
+                         preboot=None):
+            raise ValueError("bad batch")             # non-transient
+
+    disp = Dispatcher(cluster, BadAgent(), hedging=False)
+    co = Coalescer(disp, BatchingConfig(min_window_s=0.05, max_window_s=0.1))
+    try:
+        futs = [co.submit(_fake_dep(), np.zeros((2, 4), np.int32), "unikernel",
+                          needs_bucket_image=False) for _ in range(2)]
+        for f in futs:
+            with pytest.raises(ValueError):
+                f.result(10)
+        assert disp.retries == 0
+    finally:
+        cluster.shutdown()
+
+
+# ------------------------------------------------------------ window control
+
+def test_adaptive_window_grows_and_shrinks():
+    cfg = BatchingConfig(min_window_s=0.001, max_window_s=0.05,
+                         delay_fraction=0.5)
+    co = Coalescer(dispatcher=None, config=cfg)
+    q = _FnQueue(_fake_dep(), "unikernel", False, cfg)
+
+    def batch_of(n, t_enqueue):
+        return CoalescedBatch(tokens=np.zeros((2 * n, 4), np.int32),
+                              n_requests=n, bucket=n, rows_per_request=2,
+                              enqueue_times=[t_enqueue] * n, labels=[None] * n)
+
+    # healthy coalescing: tiny delay vs 100ms service -> window grows
+    co._adapt_window(q, batch_of(2, now() - 0.001), t_flush=now() - 0.1,
+                     failed=False)
+    grown = q.window
+    assert grown > cfg.min_window_s
+    # queue-delay above the budget fraction of service time -> window shrinks
+    co._adapt_window(q, batch_of(2, now() - 10.0), t_flush=now() - 0.001,
+                     failed=False)
+    assert q.window < grown
+    # a singleton batch means the window bought nothing -> keep shrinking
+    w = q.window
+    co._adapt_window(q, batch_of(1, now()), t_flush=now() - 0.1, failed=False)
+    assert q.window <= w
+    assert q.window >= cfg.min_window_s
+
+
+def test_submit_rejects_nonconforming_token_shape():
+    """A wrong-shaped member would silently shift every later member's result
+    rows in the stacked batch — it must be rejected synchronously instead."""
+    co = Coalescer(dispatcher=None, config=BatchingConfig())
+    with pytest.raises(ValueError, match="request shape"):
+        co.submit(_fake_dep(batch_size=2, prompt_len=4),
+                  np.zeros((1, 4), np.int32), "unikernel")
+    with pytest.raises(ValueError, match="request shape"):
+        co.submit(_fake_dep(batch_size=2, prompt_len=4),
+                  np.zeros((2, 8), np.int32), "unikernel")
+    assert co.requests == 0                           # nothing enqueued
+
+
+def test_bucket_rounding():
+    cfg = BatchingConfig(buckets=(1, 2, 4, 8))
+    assert [cfg.bucket_for(n) for n in (1, 2, 3, 5, 8)] == [1, 2, 4, 8, 8]
+    assert cfg.max_batch == 8
+
+
+# ------------------------------------------------------- hot-path satellites
+
+def test_p2_quantile_tracks_numpy_percentile():
+    rng = np.random.default_rng(0)
+    xs = rng.exponential(1.0, 5000)
+    for p in (0.5, 0.95):
+        est = P2Quantile(p)
+        for x in xs:
+            est.observe(float(x))
+        true = float(np.percentile(xs, p * 100))
+        assert abs(est.value - true) / true < 0.1, (p, est.value, true)
+
+
+def test_p2_quantile_constant_stream_is_exact():
+    est = P2Quantile(0.95)
+    for _ in range(50):
+        est.observe(0.02)
+    assert est.value == pytest.approx(0.02)
+    assert est.n == 50
+
+
+def test_tree_nbytes_memoized_per_image_key():
+    from repro.core.executor import _NBYTES_CACHE, tree_nbytes
+    tree = {"w": np.ones((8,), np.float32)}
+    assert tree_nbytes(tree, cache_key="nbytes-test-key") == 32
+    assert _NBYTES_CACHE["nbytes-test-key"] == 32
+    # cache hit skips the pytree walk entirely (same key, different tree)
+    other = {"w": np.ones((100,), np.float32)}
+    assert tree_nbytes(other, cache_key="nbytes-test-key") == 32
+    assert tree_nbytes(other) == 400                  # uncached path still walks
+
+
+def test_run_batch_drops_padding_rows():
+    from repro.core.executor import Executor
+    ex = Executor("run-batch-toy", "test", lambda p, t: t * 2,
+                  {"w": np.ones(2, np.float32)})
+    out = ex.run_batch(np.arange(8).reshape(4, 2), valid_rows=3)
+    assert out.shape == (3, 2)
+    np.testing.assert_array_equal(out, (np.arange(8).reshape(4, 2) * 2)[:3])
+
+
+def test_deadline_timer_fires_and_cancels():
+    from repro.core.timerwheel import DeadlineTimer
+    timer = DeadlineTimer("test-timer")
+    fired = threading.Event()
+    cancelled_fired = threading.Event()
+    entry = timer.schedule(0.01, fired.set)
+    doomed = timer.schedule(0.01, cancelled_fired.set)
+    doomed.cancel()
+    assert fired.wait(2.0)
+    assert not cancelled_fired.wait(0.1)
+    assert not entry.cancelled
+    # only ONE shared thread services every deadline
+    timers = [t for t in threading.enumerate() if t.name == "test-timer"]
+    assert len(timers) == 1
+    # close() stops the thread (no leak across repeated gateway lifecycles)
+    timer.close()
+    timers[0].join(timeout=2.0)
+    assert not timers[0].is_alive()
+    late = timer.schedule(0.001, lambda: None)
+    assert late.cancelled                             # post-close: never fires

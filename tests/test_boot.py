@@ -36,7 +36,8 @@ class _SleepStage(Stage):
 
 
 def _fake_dep():
-    return types.SimpleNamespace(image=types.SimpleNamespace(key="img"))
+    # unique key per toy param tree: tree_nbytes memoizes per image_key
+    return types.SimpleNamespace(image=types.SimpleNamespace(key="img-boot"))
 
 
 def _two_track_plan(seconds=0.05):
@@ -299,15 +300,16 @@ def test_warm_finish_never_pools_crashed_executors():
     from repro.core.drivers import WarmDriver
     from repro.core.executor import Executor
     warm = WarmDriver()
-    dep = types.SimpleNamespace(image=types.SimpleNamespace(key="img"))
-    ok = Executor("img", "warm", lambda p, t: t, {})
-    dead = Executor("img", "warm", lambda p, t: t, {})
+    # key must be unique per toy param tree: tree_nbytes memoizes per image_key
+    dep = types.SimpleNamespace(image=types.SimpleNamespace(key="img-pool"))
+    ok = Executor("img-pool", "warm", lambda p, t: t, {})
+    dead = Executor("img-pool", "warm", lambda p, t: t, {})
     dead.exit()
     warm.finish(dep, dead)
-    assert warm.pool_size("img") == 0                     # EXITED never pooled
+    assert warm.pool_size("img-pool") == 0                # EXITED never pooled
     warm.finish(dep, ok)
-    assert warm.pool_size("img") == 1
-    warm.expire_idle("img", 0)
+    assert warm.pool_size("img-pool") == 1
+    warm.expire_idle("img-pool", 0)
 
 
 def test_donor_eviction_accounts_residency(gateway):
