@@ -1,7 +1,7 @@
-"""Paper Fig 4 + the resource-waste argument, extended with the second axis of
-the cold-vs-warm comparison: request coalescing under open-loop load.
+"""Paper Fig 4 + the resource-waste argument, extended with the second and
+third axes of the cold-vs-warm comparison: request coalescing and placement.
 
-Two workloads:
+Three workloads:
 
 * ``_workload`` — the original bursty comparison (cold-only vs warm-pool) with
   idle-HBM byte-seconds integrals between bursts;
@@ -10,11 +10,20 @@ Two workloads:
   cold, cold+coalesced, and warm gateways at the SAME rates. Reported per cell:
   sustained throughput, p50/p95/p99 end-to-end latency, and boots-per-request
   — the coalescing win is boots-per-request << 1 with >= the uncoalesced
-  throughput at equal load.
+  throughput at equal load;
+* ``placement_sweep`` — a multi-host sweep of the locality-aware scheduler
+  (repro.core.scheduler): affinity-weighted HRW routing vs pure least-loaded
+  at the same arrival rate and the same simulated artifact-transfer cost
+  model, with per-host tiers sized to hold ONE function's artifacts so
+  placement alone decides whether hosts thrash their caches. Emits
+  ``placement/*`` rows: program/snapshot tier hit rates, peer vs store
+  fetches, and cold end-to-end latency.
 
 ``--smoke`` runs a tiny coalesced-cold sweep and exits nonzero if
-boots-per-request regresses to >= 1.0 (i.e. coalescing stopped engaging); CI
-runs it on every push.
+boots-per-request regresses to >= 1.0 (i.e. coalescing stopped engaging);
+``--smoke --hosts 4`` runs the multi-host placement smoke instead and exits
+nonzero if the scheduler's program-cache hit rate drops below 0.5. CI runs
+both on every push and uploads the rows (``--json``) as workflow artifacts.
 """
 import argparse
 import sys
@@ -25,7 +34,14 @@ import numpy as np
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))   # `--smoke` runs standalone
 
-from benchmarks.common import bench_spec, emit, parallel_invokes
+from benchmarks.common import bench_spec, emit, emit_json, parallel_invokes
+
+# simulated artifact-transfer cost model for the placement benches: a global
+# store fetch is charged 150 s/GB (~7 MB/s, a congested registry link) and a
+# host-to-host peer transfer 5x less — the relative gap, not the absolute
+# numbers, is what the scheduler's locality should exploit
+SIM_STORE_S_PER_GB = 150.0
+SIM_PEER_S_PER_GB = 30.0
 
 
 def _workload(gw, spec, label: str, bursts: int = 3, per_burst: int = 6,
@@ -65,6 +81,32 @@ def open_loop(gw, spec, label: str, rate_rps: float, n_requests: int,
         if dt > 0:
             time.sleep(dt)
         futs.append(gw.invoke_async(spec.name, label=label))
+    for f in futs:
+        try:
+            f.result(timeout)
+        except Exception:
+            failures += 1
+    wall = time.perf_counter() - t0
+    return wall, failures
+
+
+def open_loop_multi(gw, specs, label: str, rate_rps: float, n_requests: int,
+                    seed: int = 0, timeout: float = 600.0):
+    """Open-loop arrivals spread uniformly over several deployed functions —
+    the placement sweep's traffic: hosts see interleaved artifact demands."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_rps, n_requests)
+    picks = rng.integers(0, len(specs), n_requests)
+    futs = []
+    failures = 0
+    t0 = time.perf_counter()
+    t_next = t0
+    for g, p in zip(gaps, picks):
+        t_next += g
+        dt = t_next - time.perf_counter()
+        if dt > 0:
+            time.sleep(dt)
+        futs.append(gw.invoke_async(specs[p].name, label=label))
     for f in futs:
         try:
             f.result(timeout)
@@ -125,6 +167,60 @@ def load_sweep(make_gateway, rates=(40.0, 120.0), n_requests: int = 60) -> list:
     return cells
 
 
+def placement_sweep(make_gateway, hosts: int = 4, rate_rps: float = 6.0,
+                    n_requests: int = 80) -> list:
+    """Multi-host cold sweep: affinity-weighted HRW routing vs least-loaded.
+
+    Both configs share the cluster size, the arrival process, and the
+    simulated transfer-cost model; only the scheduler's affinity weight
+    differs. Two functions are deployed and each host's tiers are shrunk to
+    hold ONE function's artifacts — so least-loaded placement (which
+    interleaves functions on every host) thrashes the tiers and re-pays the
+    store fetch, while the affinity scheduler partitions the fleet by HRW
+    replica set and converges to RAM hits. The win to look for: program-cache
+    hit rate >= 0.5 and a lower cold e2e median at the same arrival rate.
+    """
+    from repro.core import SchedulerConfig
+
+    specs = [bench_spec(batch=1, prompt=16, decode=2),
+             bench_spec(batch=1, prompt=24, decode=2)]
+    cells = []
+    for config_name, weight in (("affinity", 2.0), ("no-affinity", 0.0)):
+        cfg = SchedulerConfig(affinity_weight=weight, replicas=2,
+                              sim_store_s_per_gb=SIM_STORE_S_PER_GB,
+                              sim_peer_s_per_gb=SIM_PEER_S_PER_GB)
+        gw = make_gateway(mode="cold", n_hosts=hosts, scheduler=cfg)
+        deps = [gw.deploy(s) for s in specs]
+        prog = max(d.image.manifest.program_bytes for d in deps)
+        snap = max(d.image.manifest.snapshot_bytes for d in deps)
+        for h in gw.cluster.hosts:           # tiers fit one function, not two
+            h.cache.programs.capacity_bytes = int(prog * 1.5)
+            h.cache.snapshots.capacity_bytes = int(snap * 1.5)
+        label = f"placement:{config_name}"
+        wall, failures = open_loop_multi(gw, specs, label, rate_rps, n_requests)
+        st = gw.stats(label)
+        ps = gw.placement_summary()
+        gw.shutdown()
+        cell = {
+            "config": config_name, "hosts": hosts, "rate": rate_rps,
+            "hit_rate": ps["program_hit_rate"],
+            "snapshot_hit_rate": ps["snapshot_hit_rate"],
+            "peer_fetches": ps["peer_fetches"],
+            "store_fetches": ps["store_fetches"],
+            "p50": st.p50, "p95": st.p95, "n_ok": st.n,
+            "failures": failures, "throughput": st.n / wall,
+        }
+        cells.append(cell)
+        emit(f"placement/{config_name}/hosts{hosts}", cell["hit_rate"],
+             f"hit_rate={cell['hit_rate']:.3f};"
+             f"snapshot_hit_rate={cell['snapshot_hit_rate']:.3f};"
+             f"p50_ms={cell['p50']:.1f};p95_ms={cell['p95']:.1f};"
+             f"peer={cell['peer_fetches']};store={cell['store_fetches']};"
+             f"throughput_rps={cell['throughput']:.1f};"
+             f"rate_rps={rate_rps:g};fails={cell['failures']}")
+    return cells
+
+
 def run(make_gateway, samples_scale: float = 1.0) -> None:
     spec = bench_spec()
 
@@ -146,6 +242,45 @@ def run(make_gateway, samples_scale: float = 1.0) -> None:
              f"total_GBs={res['total_GBs']:.4f};wall_s={wall:.1f}")
 
     load_sweep(make_gateway)
+    placement_sweep(make_gateway)
+
+
+def smoke_placement(hosts: int = 4, rate_rps: float = 30.0,
+                    n_requests: int = 24) -> int:
+    """CI gate: the affinity scheduler must keep the program-cache hit rate
+    at or above 0.5 on a multi-host fleet (i.e. locality is engaging)."""
+    from repro.core import Gateway, SchedulerConfig
+
+    spec = bench_spec(batch=1, prompt=16, decode=2)
+    gw = Gateway(n_hosts=hosts, slots_per_host=2, mode="cold", hedging=False,
+                 scheduler=SchedulerConfig(
+                     affinity_weight=2.0, replicas=2,
+                     sim_store_s_per_gb=SIM_STORE_S_PER_GB,
+                     sim_peer_s_per_gb=SIM_PEER_S_PER_GB))
+    gw.deploy(spec)
+    wall, failures = open_loop(gw, spec, "smoke-placement", rate_rps, n_requests)
+    st = gw.stats("smoke-placement")
+    ps = gw.placement_summary()
+    gw.shutdown()
+    hit = ps["program_hit_rate"]
+    emit(f"placement/smoke/hosts{hosts}", hit,
+         f"hit_rate={hit:.3f};"
+         f"snapshot_hit_rate={ps['snapshot_hit_rate']:.3f};"
+         f"p50_ms={st.p50:.1f};peer={ps['peer_fetches']};"
+         f"store={ps['store_fetches']};fails={failures}")
+    print(f"bench-smoke[placement]: n_ok={st.n} failures={failures} "
+          f"hosts={hosts} program_hit_rate={hit:.3f} "
+          f"peer={ps['peer_fetches']} store={ps['store_fetches']} "
+          f"p50_ms={st.p50:.1f} wall_s={wall:.1f}")
+    if st.n < n_requests:
+        print(f"bench-smoke[placement]: FAIL — {n_requests - st.n} requests failed")
+        return 1
+    if hit < 0.5:
+        print("bench-smoke[placement]: FAIL — program-cache hit rate < 0.5, "
+              "affinity placement is not engaging")
+        return 1
+    print("bench-smoke[placement]: OK")
+    return 0
 
 
 def smoke(rate_rps: float = 60.0, n_requests: int = 16) -> int:
@@ -162,6 +297,9 @@ def smoke(rate_rps: float = 60.0, n_requests: int = 16) -> int:
     summary = gw.batching_summary()
     gw.shutdown()
     bpr = boots / max(st.n, 1)
+    emit("e2e_load/smoke/coalesce", st.n / wall,
+         f"p50_ms={st.p50:.1f};boots_per_request={bpr:.3f};"
+         f"mean_batch={summary['mean_batch_size']:.2f};fails={failures}")
     print(f"bench-smoke: n_ok={st.n} failures={failures} boots={boots} "
           f"boots_per_request={bpr:.3f} p50_ms={st.p50:.1f} "
           f"mean_batch={summary['mean_batch_size']:.2f} wall_s={wall:.1f}")
@@ -179,15 +317,28 @@ def smoke(rate_rps: float = 60.0, n_requests: int = 16) -> int:
 if __name__ == "__main__":
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("--smoke", action="store_true",
-                        help="tiny coalesced-cold run; nonzero exit on "
-                             "boots-per-request regression")
+                        help="tiny CI run; nonzero exit on regression "
+                             "(boots-per-request, or hit rate with --hosts > 1)")
+    parser.add_argument("--hosts", type=int, default=1,
+                        help="with --smoke: >1 runs the multi-host placement "
+                             "smoke (program-cache hit-rate gate) instead of "
+                             "the coalescing gate")
+    parser.add_argument("--json", type=str, default=None,
+                        help="also write the emitted rows to this JSON file "
+                             "(CI uploads it as a workflow artifact)")
     args = parser.parse_args()
     if args.smoke:
-        sys.exit(smoke())
+        rc = smoke_placement(hosts=args.hosts) if args.hosts > 1 else smoke()
+        if args.json:
+            emit_json(args.json)
+        sys.exit(rc)
     from repro.core import Gateway
 
     def make_gateway(**kw):
         kw.setdefault("mode", "cold")
-        return Gateway(n_hosts=2, slots_per_host=3, hedging=False, **kw)
+        kw.setdefault("n_hosts", 2)
+        return Gateway(slots_per_host=3, hedging=False, **kw)
 
     run(make_gateway)
+    if args.json:
+        emit_json(args.json)

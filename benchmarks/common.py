@@ -24,6 +24,18 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(row, flush=True)
 
 
+def emit_json(path) -> None:
+    """Dump every emitted row as JSON (CI uploads these as workflow artifacts)."""
+    import json
+    rows = []
+    for r in ROWS:
+        name, value, derived = r.split(",", 2)
+        rows.append({"name": name, "value": float(value), "derived": derived})
+    p = Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(rows, indent=2) + "\n")
+
+
 def parallel_invokes(fn: Callable, n_requests: int, concurrency: int) -> List:
     with concurrent.futures.ThreadPoolExecutor(concurrency) as pool:
         futs = [pool.submit(fn) for _ in range(n_requests)]

@@ -126,6 +126,36 @@ def coalescing_table() -> str:
     return "\n".join(rows)
 
 
+def placement_table() -> str:
+    """Multi-host placement sweep: affinity-weighted HRW routing vs pure
+    least-loaded at equal arrival rate, from the ``placement/*`` rows
+    bench_e2e.py writes to bench_rows.csv."""
+    csv = ART.parent / "bench_rows.csv"
+    if not csv.exists():
+        return "(run benchmarks/run.py to populate)"
+    cells = []          # (config, hosts, value, derived-dict)
+    for line in csv.read_text().splitlines()[1:]:
+        parts = line.split(",", 2)
+        if len(parts) < 2 or not parts[0].startswith("placement/"):
+            continue
+        _, config, hosts = parts[0].split("/", 2)
+        derived = dict(kv.split("=", 1) for kv in parts[2].split(";")
+                       if "=" in kv) if len(parts) > 2 else {}
+        cells.append((config, hosts.removeprefix("hosts"), derived))
+    if not cells:
+        return "(no placement rows in bench_rows.csv)"
+    rows = ["| config | hosts | program hit rate | snapshot hit rate | "
+            "peer fetches | store fetches | p50 ms | p95 ms | throughput rps |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for config, hosts, d in cells:
+        rows.append(
+            f"| {config} | {hosts} | {d.get('hit_rate', '—')} "
+            f"| {d.get('snapshot_hit_rate', '—')} | {d.get('peer', '—')} "
+            f"| {d.get('store', '—')} | {d.get('p50_ms', '—')} "
+            f"| {d.get('p95_ms', '—')} | {d.get('throughput_rps', '—')} |")
+    return "\n".join(rows)
+
+
 def variants_table() -> str:
     recs = [r for r in load_records(variant=None) if r["variant"] != "baseline"]
     if not recs:
@@ -153,6 +183,10 @@ SKELETON = """# Experiments
 
 <!-- COALESCING_TABLE -->
 
+## Placement under multi-host load
+
+<!-- PLACEMENT_TABLE -->
+
 ## Multi-pod dry run
 
 <!-- DRYRUN_TABLE -->
@@ -174,6 +208,8 @@ def main() -> None:
         md += "\n## Startup breakdown (per boot stage)\n\n<!-- STARTUP_TABLE -->\n"
     if "COALESCING_TABLE" not in md:
         md += "\n## Coalescing under open-loop load\n\n<!-- COALESCING_TABLE -->\n"
+    if "PLACEMENT_TABLE" not in md:
+        md += "\n## Placement under multi-host load\n\n<!-- PLACEMENT_TABLE -->\n"
     def safe(fn):
         try:
             return fn()
@@ -183,6 +219,7 @@ def main() -> None:
     startup = safe(startup_breakdown_table)
     md = _replace(md, "STARTUP_TABLE", startup)
     md = _replace(md, "COALESCING_TABLE", safe(coalescing_table))
+    md = _replace(md, "PLACEMENT_TABLE", safe(placement_table))
     md = _replace(md, "DRYRUN_TABLE", safe(dryrun_table))
     md = _replace(md, "ROOFLINE_TABLE", safe(roofline_table))
     md = _replace(md, "VARIANTS_TABLE", safe(variants_table))

@@ -40,7 +40,8 @@ def main() -> None:
 
     def make_gateway(**kw) -> Gateway:
         kw.setdefault("mode", "cold")
-        return Gateway(n_hosts=2, slots_per_host=3, hedging=False, **kw)
+        kw.setdefault("n_hosts", 2)
+        return Gateway(slots_per_host=3, hedging=False, **kw)
 
     bench_e2e.run(make_gateway)
 

@@ -47,7 +47,7 @@ class Agent:
         if bucket_rows is not None and not driver.supports_batch:
             return None
         return driver.engine.launch(driver.plan(dep), dep, driver_name=driver.name,
-                                    bucket_rows=bucket_rows)
+                                    bucket_rows=bucket_rows, host=host)
 
     def _claim_or_start(self, driver, dep: Deployment, tl: Timeline,
                         preboot: Optional[BootHandle],

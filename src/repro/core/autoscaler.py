@@ -46,6 +46,11 @@ class ColdOnlyScaler:
     def resident_nbytes(self, cluster: Cluster) -> int:
         return 0
 
+    def per_host_residency(self, cluster: Cluster) -> Dict[int, int]:
+        """Cold-only holds no executors between requests — zero everywhere, by
+        construction (the placement report shows this next to warm's pools)."""
+        return {h.host_id: 0 for h in cluster.hosts}
+
 
 class WarmPoolAutoscaler:
     """Per-function pool targets from observed load; prewarm + idle-expiry loop."""
@@ -133,3 +138,9 @@ class WarmPoolAutoscaler:
             warm: WarmDriver = host.drivers["warm"]  # type: ignore[assignment]
             total += warm.resident_nbytes()
         return total
+
+    def per_host_residency(self, cluster: Cluster) -> Dict[int, int]:
+        """HBM held by each host's warm pools right now — the per-host view of
+        the paper's resource-waste integral, reported by placement_summary."""
+        return {h.host_id: h.drivers["warm"].resident_nbytes()
+                for h in cluster.hosts}

@@ -2,18 +2,25 @@
 
 Each Host models one machine: a bounded slot pool (the paper's 24-core server that
 degrades past 20 parallel starts), its own driver instances (so warm pools and fork
-donors are per-host state, exactly like container pools are per-machine), and a
-liveness flag. ``kill()`` simulates node failure: in-flight work raises HostFailure
-at the next lifecycle boundary and the dispatcher re-routes — stateless cold-only
-executors make this loss-free, which is the paper's predictability argument.
+donors are per-host state, exactly like container pools are per-machine), a tiered
+artifact cache (program payloads + snapshot host trees in host RAM — see
+repro.core.scheduler), and a liveness flag. ``kill()`` simulates node failure:
+in-flight work raises HostFailure at the next lifecycle boundary and the dispatcher
+re-routes — stateless cold-only executors make this loss-free, which is the paper's
+predictability argument.
+
+Routing lives in the Scheduler: ``route(image_key, bucket_rows)`` blends cache
+affinity (rendezvous-hashed replica sets + actual tier residency) with live load,
+so per-boot artifact cost drops as hosts are added instead of staying flat.
 """
 from __future__ import annotations
 
 import threading
 from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Union
 
 from repro.core.drivers import make_drivers
+from repro.core.scheduler import HostArtifactCache, Scheduler, SchedulerConfig
 
 
 class HostFailure(RuntimeError):
@@ -21,11 +28,13 @@ class HostFailure(RuntimeError):
 
 
 class Host:
-    def __init__(self, host_id: int, n_slots: int = 4, on_exit=None) -> None:
+    def __init__(self, host_id: int, n_slots: int = 4, on_exit=None,
+                 cache: Optional[HostArtifactCache] = None) -> None:
         self.host_id = host_id
         self.n_slots = n_slots
         self.alive = True
-        self.drivers = make_drivers(on_exit=on_exit)
+        self.cache = cache
+        self.drivers = make_drivers(on_exit=on_exit, host=self)
         self._pool = ThreadPoolExecutor(max_workers=n_slots,
                                         thread_name_prefix=f"host{host_id}")
         self._inflight = 0
@@ -44,7 +53,15 @@ class Host:
                 with self._lock:
                     self._inflight -= 1
 
-        return self._pool.submit(wrapped)
+        try:
+            return self._pool.submit(wrapped)
+        except RuntimeError as e:
+            # an invoke racing Gateway.shutdown: the pool rejected the work, so
+            # ``wrapped`` never runs — undo the increment or the host reports
+            # phantom load forever
+            with self._lock:
+                self._inflight -= 1
+            raise HostFailure(f"host {self.host_id} rejected work: {e}") from e
 
     @property
     def load(self) -> int:
@@ -66,26 +83,30 @@ class Host:
 
 
 class Cluster:
-    def __init__(self, n_hosts: int = 1, slots_per_host: int = 4, on_exit=None) -> None:
-        self.hosts: List[Host] = [Host(i, slots_per_host, on_exit=on_exit)
-                                  for i in range(n_hosts)]
-        self._rr = 0
-        self._lock = threading.Lock()
+    def __init__(self, n_hosts: int = 1, slots_per_host: int = 4, on_exit=None,
+                 scheduler: Union[SchedulerConfig, None] = None) -> None:
+        self.scheduler = Scheduler(self, scheduler or SchedulerConfig())
+        self.hosts: List[Host] = [
+            Host(i, slots_per_host, on_exit=on_exit,
+                 cache=self.scheduler.make_cache(i))
+            for i in range(n_hosts)]
 
     def alive_hosts(self) -> List[Host]:
         return [h for h in self.hosts if h.alive]
 
-    def pick_host(self, exclude: Optional[set] = None) -> Host:
-        """Least-loaded among alive hosts (round-robin tiebreak)."""
-        exclude = exclude or set()
-        alive = [h for h in self.alive_hosts() if h.host_id not in exclude]
-        if not alive:
-            alive = self.alive_hosts()
-        if not alive:
-            raise HostFailure("no alive hosts")
-        with self._lock:
-            self._rr += 1
-            return min(alive, key=lambda h: (h.load, (h.host_id + self._rr) % len(alive)))
+    def route(self, image_key: Optional[str] = None,
+              bucket_rows: Optional[int] = None,
+              exclude: Optional[set] = None, strict: bool = False) -> Host:
+        """Affinity-aware placement (falls back to least-loaded for key-less
+        work). ``strict=True`` raises instead of re-landing inside ``exclude``
+        — the hedge path must never back up onto the straggler's own host."""
+        host = self.scheduler.select(image_key, bucket_rows,
+                                     exclude=exclude, strict=strict)
+        if host is None:
+            if not self.alive_hosts():
+                raise HostFailure("no alive hosts")
+            raise HostFailure("no alive host outside the excluded set")
+        return host
 
     def kill_host(self, host_id: int) -> None:
         self.hosts[host_id].kill()

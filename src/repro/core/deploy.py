@@ -81,7 +81,10 @@ class Deployment:
         return self.spec.batch_size
 
     def bucket_image_key(self, rows: int) -> str:
-        return f"{self.image.key}-b{rows}"
+        # single source of truth with the scheduler's affinity keys: routing
+        # probes and tier inserts must agree on this exact string
+        from repro.core.scheduler import program_artifact_key
+        return program_artifact_key(self.image.key, rows)
 
     def abstract_tokens_for(self, rows: Optional[int]) -> jax.ShapeDtypeStruct:
         if rows is None or rows == self.base_rows:
@@ -120,16 +123,19 @@ class Deployment:
         fallback = self._program_fallback(bucket_rows)
         if fallback is not None:
             return fallback
-        return self.cache.load_program(self._program_key(bucket_rows))
+        return self.cache.load_program(self.program_key(bucket_rows))
 
     def fetch_program_payload(self, bucket_rows: Optional[int] = None) -> Optional[bytes]:
         """Serialized-program bytes for the boot pipeline's FetchProgram stage,
         or None when this host degraded to the in-process fallback program."""
         if self._program_fallback(bucket_rows) is not None:
             return None
-        return self.cache.read_program_bytes(self._program_key(bucket_rows))
+        return self.cache.read_program_bytes(self.program_key(bucket_rows))
 
-    def _program_key(self, bucket_rows: Optional[int]) -> str:
+    def program_key(self, bucket_rows: Optional[int] = None) -> str:
+        """Registry/cache key of the program artifact for a request shape —
+        the unit of placement affinity (repro.core.scheduler) and of the
+        per-host program tier."""
         if bucket_rows is None or bucket_rows == self.base_rows:
             return self.image.key
         return self.bucket_image_key(bucket_rows)

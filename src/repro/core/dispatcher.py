@@ -142,16 +142,34 @@ class Dispatcher:
 
     def _attempt(self, result: Future, dep, tokens, driver_name: str, tl: Timeline,
                  tried: set, n_try: int, label, allow_hedge: bool,
-                 speculative: bool = False) -> None:
+                 speculative: bool = False, hedge: bool = False) -> bool:
+        """Dispatch one attempt; returns True if work was actually submitted.
+
+        Placement is affinity-aware: the cluster routes on the deployment's
+        program artifact key (and the batch's bucket shape) so boots land where
+        the bytes already are. ``tried`` excludes hosts this request already
+        ran on — retries re-route elsewhere, and a hedge (``hedge=True``) is
+        strict about it: with no distinct host alive it silently stands down
+        rather than racing the straggler on its own machine.
+        """
         batch = tokens if isinstance(tokens, CoalescedBatch) else None
         key = f"{dep.name if dep else 'noop'}:{driver_name}"
         if batch is not None:
             key += f":b{batch.bucket}"      # service time scales with the bucket
+        bucket_rows = None
+        if batch is not None and dep is not None \
+                and batch.padded_rows != dep.base_rows:
+            bucket_rows = batch.padded_rows
+        image = getattr(dep, "image", None)      # noop probes / test stand-ins
         try:
-            host = self.cluster.pick_host(exclude=tried)
+            host = self.cluster.route(image.key if image is not None else None,
+                                      bucket_rows=bucket_rows, exclude=tried,
+                                      strict=hedge)
         except HostFailure as e:
+            if hedge:
+                return False        # primary still owns the request — no backup
             _settle(result, error=e)
-            return
+            return False
         tried = tried | {host.host_id}
 
         preboot = None
@@ -176,7 +194,23 @@ class Dispatcher:
             self.latency.observe(key, tl.e2e)
             return out
 
-        fut = host.submit(work)
+        try:
+            fut = host.submit(work)
+        except HostFailure as e:
+            # the host died (or its pool shut down) between route and submit
+            if preboot is not None:
+                preboot.cancel()
+            if hedge:
+                return False
+            if n_try < self.max_retries:
+                with self._lock:
+                    self.retries += 1
+                fresh = Timeline(t_enqueue=tl.t_enqueue)
+                return self._attempt(result, dep, tokens, driver_name, fresh,
+                                     tried, n_try + 1, label, allow_hedge,
+                                     speculative)
+            _settle(result, error=e)
+            return False
 
         def on_done(f: Future) -> None:
             if preboot is not None and f.exception() is not None:
@@ -208,12 +242,16 @@ class Dispatcher:
             def fire_hedge() -> None:
                 if result.done() or fut.done():
                     return          # finished / failed (retry path owns failures)
-                with self._lock:
-                    self.hedges_launched += 1
                 fresh = Timeline(t_enqueue=tl.t_enqueue)
-                self._attempt(result, dep, tokens, driver_name, fresh, tried,
-                              n_try + 1, label, allow_hedge=False)
+                # strict routing: the backup MUST land on a different host than
+                # every attempt so far, or not launch at all
+                if self._attempt(result, dep, tokens, driver_name, fresh, tried,
+                                 n_try + 1, label, allow_hedge=False,
+                                 hedge=True):
+                    with self._lock:
+                        self.hedges_launched += 1
 
             entry = self._hedge_timer.schedule(self.hedge_factor * p95, fire_hedge)
             fut.add_done_callback(lambda _f: entry.cancel())
             result.add_done_callback(lambda _f: entry.cancel())
+        return True

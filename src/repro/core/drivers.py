@@ -49,6 +49,10 @@ from repro.core.metrics import Timeline
 class Driver:
     name: str = "base"
     engine: BootEngine = ENGINE
+    # the Host whose driver table this instance lives in (set by make_drivers);
+    # boot stages use it to consult the host's tiered artifact cache before the
+    # global stores. None for standalone driver instances (no cache tier).
+    host = None
     # drivers whose boots are pure (no pool/donor state mutated before the
     # executor is claimed) may be started speculatively by the dispatcher
     supports_preboot: bool = False
@@ -69,7 +73,7 @@ class Driver:
               bucket_rows: Optional[int] = None) -> Executor:
         """The ONE start body shared by every driver: execute the declaration."""
         return self.engine.execute(self.plan(dep), dep, tl, driver_name=self.name,
-                                   bucket_rows=bucket_rows)
+                                   bucket_rows=bucket_rows, host=self.host)
 
     def finish(self, dep: Deployment, ex: Executor) -> None:
         """Post-request lifecycle. Cold drivers exit; pool drivers return."""
@@ -109,7 +113,7 @@ class ForkDriver(Driver):
             if donor is None or donor.params is None:
                 donor = self.engine.execute(
                     UnikernelDriver().plan(dep), dep, Timeline(),
-                    driver_name="fork-donor")
+                    driver_name="fork-donor", host=self.host)
                 self._donors[dep.image.key] = donor
             return donor
 
@@ -190,7 +194,7 @@ class WarmDriver(Driver):
     def prewarm(self, dep: Deployment, n: int) -> None:
         for _ in range(n):
             ex = self.engine.execute(self.fallback.plan(dep), dep, Timeline(),
-                                     driver_name=self.name)
+                                     driver_name=self.name, host=self.host)
             with self._lock:
                 self._pools.setdefault(dep.image.key, []).append(ex)
 
@@ -264,8 +268,8 @@ ALL_DRIVERS = ("process", "fork", "unikernel", "paused", "warm",
                "cold_jit_cached", "cold_jit")
 
 
-def make_drivers(on_exit=None) -> Dict[str, Driver]:
-    return {
+def make_drivers(on_exit=None, host=None) -> Dict[str, Driver]:
+    drivers: Dict[str, Driver] = {
         "process": ProcessDriver(on_exit=on_exit),
         "fork": ForkDriver(on_exit=on_exit),
         "unikernel": UnikernelDriver(),
@@ -274,3 +278,6 @@ def make_drivers(on_exit=None) -> Dict[str, Driver]:
         "cold_jit_cached": ColdJITCachedDriver(),
         "cold_jit": ColdJITDriver(),
     }
+    for drv in drivers.values():
+        drv.host = host
+    return drivers

@@ -28,6 +28,7 @@ from repro.core.compile_cache import CompileCache
 from repro.core.deploy import Deployment, deploy
 from repro.core.dispatcher import Dispatcher
 from repro.core.metrics import LatencyStats, Recorder, ResidencyTracker
+from repro.core.scheduler import SchedulerConfig
 from repro.core.snapshot import SnapshotStore
 
 
@@ -35,7 +36,8 @@ class Gateway:
     def __init__(self, *, n_hosts: int = 1, slots_per_host: int = 4,
                  mode: str = "cold", work_dir: Optional[str] = None,
                  hedging: bool = True, speculative: bool = False,
-                 batching: Union[bool, BatchingConfig] = False) -> None:
+                 batching: Union[bool, BatchingConfig] = False,
+                 scheduler: Optional[SchedulerConfig] = None) -> None:
         assert mode in ("cold", "warm")
         self.mode = mode
         self.work_dir = work_dir or tempfile.mkdtemp(prefix="repro_faas_")
@@ -45,7 +47,7 @@ class Gateway:
         self.recorder = Recorder()
         self.residency = ResidencyTracker()
         self.cluster = Cluster(n_hosts=n_hosts, slots_per_host=slots_per_host,
-                               on_exit=self._account_exit)
+                               on_exit=self._account_exit, scheduler=scheduler)
         self.agent = Agent(self.recorder, self.residency)
         self.dispatcher = Dispatcher(self.cluster, self.agent, hedging=hedging,
                                      speculative=speculative)
@@ -137,6 +139,17 @@ class Gateway:
         if self.coalescer is None:
             return None
         return self.coalescer.summary()
+
+    def placement_summary(self) -> Dict[str, object]:
+        """Scheduler + tiered-cache health: per-host hit/miss/evict counters and
+        bytes, fleet hit rates, peer vs store fetches, and per-host residency
+        (warm-pool HBM for the warm scaler; zero by construction for cold)."""
+        summary = self.cluster.scheduler.summary()
+        residency = self.scaler.per_host_residency(self.cluster)
+        for host_id, entry in summary["hosts"].items():
+            entry["resident_bytes"] = residency.get(host_id, 0)
+        summary["per_host_resident_bytes"] = residency
+        return summary
 
     def _account_exit(self, ex) -> None:
         self.residency.add_residency(ex.nbytes, ex.resident_seconds, ex.busy_seconds)

@@ -152,11 +152,13 @@ class Series:
 
 
 # boot-stage -> coarse bucket, for the paper-style two-column summary:
-# "program" = acquire the compiled program (fetch/deserialize or trace/compile),
+# "program" = acquire the compiled program (fetch/deserialize or trace/compile;
+# the tiered-cache variants record which source actually served the bytes),
 # "weights" = materialize weights on the device (host restore + device_put).
-PROGRAM_STAGES = ("fetch_program", "deserialize_program", "trace_compile",
-                  "fetch_parked")
-WEIGHT_STAGES = ("restore_weights_host", "device_put", "alias_donor")
+PROGRAM_STAGES = ("fetch_program", "fetch_program_cached", "fetch_peer",
+                  "deserialize_program", "trace_compile", "fetch_parked")
+WEIGHT_STAGES = ("restore_weights_host", "restore_weights_cached",
+                 "restore_weights_peer", "device_put", "alias_donor")
 
 
 @dataclasses.dataclass

@@ -1,0 +1,455 @@
+"""Locality-aware placement: rendezvous hashing + tiered per-host artifact caches.
+
+The cold-only design makes every request pay a full boot — which is exactly why
+*where* the boot runs starts to matter at fleet scale. "How Low Can You Go?"
+(Tan et al.) shows the cold-start floor is dominated by per-invocation artifact
+and placement overheads once the sandbox itself is cheap, and FaaSLight shows
+application artifact loading is the dominant application-level cost. A fleet of
+N hosts that all re-fetch the same program bytes and weight snapshots from the
+global stores pays that cost N times and *grows* it with fleet size.
+
+This module converts the fleet into one cache hierarchy:
+
+* ``LruTier``       — a byte-accounted LRU over artifact bytes / host-leaf trees,
+                      with hit/miss/evict counters (one per host per artifact kind);
+* ``HostArtifactCache`` — the two tiers of one host (program payloads + snapshot
+                      host trees) plus peer/store fetch accounting and the
+                      simulated transfer-cost model;
+* ``CacheDirectory``— who holds what, so a missing host can fetch from a peer
+                      (cheap) instead of the global store (expensive);
+* ``Scheduler``     — placement: rendezvous/HRW hashing gives every artifact a
+                      stable k-replica preferred set (minimal reshuffle when
+                      hosts die or join), blended with live load so a hot host
+                      sheds work to its replica siblings.
+
+The boot pipeline consults the host tier before the global store and records
+which path it took as distinct Timeline stages (``fetch_program_cached``,
+``fetch_peer``, ``fetch_program``), so the benchmarks can show per-boot cost
+*dropping* as hosts are added instead of staying flat.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import threading
+import time
+from collections import OrderedDict
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Placement + host-tier knobs (Gateway(scheduler=...) accepts one)."""
+
+    # how many load units a cache hit is worth when scoring hosts: 0 disables
+    # locality entirely (pure least-loaded, the pre-scheduler behavior)
+    affinity_weight: float = 2.0
+    # HRW replica set size: each artifact key maps to this many preferred
+    # hosts, so load spreads without every host caching every image
+    replicas: int = 2
+    # byte capacity of the per-host RAM tiers
+    program_tier_bytes: int = 256 << 20
+    snapshot_tier_bytes: int = 2 << 30
+    # simulated transfer cost (seconds per GB) charged on a tier miss; 0 = off
+    # (tests stay timing-free). Peer transfers are modeled faster than global
+    # store fetches — that difference is the locality win the bench measures.
+    sim_store_s_per_gb: float = 0.0
+    sim_peer_s_per_gb: float = 0.0
+
+
+def program_artifact_key(image_key: str, bucket_rows: Optional[int]) -> str:
+    """Cache key for a program artifact (matches Deployment.bucket_image_key)."""
+    if bucket_rows is None:
+        return image_key
+    return f"{image_key}-b{bucket_rows}"
+
+
+def hrw_hosts(key: str, host_ids: Sequence[int], k: int) -> List[int]:
+    """Rendezvous (highest-random-weight) top-k hosts for an artifact key.
+
+    Each (key, host) pair hashes independently, so removing a host only
+    reassigns the keys that ranked it — every other key's replica set is
+    untouched (the minimal-reshuffle property consistent hashing is for).
+    """
+    def weight(hid: int) -> bytes:
+        return hashlib.blake2b(f"{key}|{hid}".encode(), digest_size=8).digest()
+
+    return sorted(host_ids, key=weight, reverse=True)[:max(k, 1)]
+
+
+class LruTier:
+    """Byte-bounded LRU cache with hit/miss/evict counters.
+
+    Values are opaque (program payload bytes, snapshot host trees); the caller
+    supplies each entry's byte cost. An entry larger than the whole tier is
+    rejected rather than evicting everything for a value that can never fit.
+    """
+
+    def __init__(self, capacity_bytes: int,
+                 on_evict: Optional[Callable[[str], None]] = None) -> None:
+        self.capacity_bytes = int(capacity_bytes)
+        self.on_evict = on_evict
+        self._entries: "OrderedDict[str, Tuple[Any, int]]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.bytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key: str) -> Optional[Any]:
+        """Value for ``key`` (marking it most-recently-used), or None (a miss)."""
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None:
+                self.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return entry[0]
+
+    def peek(self, key: str) -> Optional[Tuple[Any, int]]:
+        """(value, nbytes) without touching counters or recency — peer reads
+        must not inflate the owner's local hit rate."""
+        with self._lock:
+            return self._entries.get(key)
+
+    def contains(self, key: str) -> bool:
+        """Membership without counter side effects (the scheduler's affinity
+        probe runs on every route and must not look like cache traffic)."""
+        with self._lock:
+            return key in self._entries
+
+    def put(self, key: str, value: Any, nbytes: int) -> bool:
+        """Insert (or refresh) an entry, evicting LRU entries past capacity.
+
+        Returns False when the entry alone exceeds the tier capacity.
+        """
+        nbytes = int(nbytes)
+        evicted: List[str] = []
+        with self._lock:
+            if nbytes > self.capacity_bytes:
+                return False
+            old = self._entries.pop(key, None)
+            if old is not None:
+                self.bytes -= old[1]
+            self._entries[key] = (value, nbytes)
+            self.bytes += nbytes
+            while self.bytes > self.capacity_bytes:
+                victim, (_, vbytes) = self._entries.popitem(last=False)
+                self.bytes -= vbytes
+                self.evictions += 1
+                evicted.append(victim)
+        if self.on_evict is not None:
+            for victim in evicted:
+                self.on_evict(victim)
+        return True
+
+    def drop(self, key: str) -> None:
+        with self._lock:
+            entry = self._entries.pop(key, None)
+            if entry is not None:
+                self.bytes -= entry[1]
+        if entry is not None and self.on_evict is not None:
+            self.on_evict(key)
+
+    def keys(self) -> List[str]:
+        with self._lock:
+            return list(self._entries)
+
+    def stats(self) -> Dict[str, float]:
+        with self._lock:
+            total = self.hits + self.misses
+            return {
+                "items": float(len(self._entries)),
+                "bytes": float(self.bytes),
+                "capacity_bytes": float(self.capacity_bytes),
+                "hits": float(self.hits),
+                "misses": float(self.misses),
+                "evictions": float(self.evictions),
+                "hit_rate": self.hits / total if total else 0.0,
+            }
+
+
+PROGRAM_TIER = "program"
+SNAPSHOT_TIER = "snapshot"
+
+
+class ProgramArtifact:
+    """A program-tier entry: serialized payload + a host-local loaded memo.
+
+    Only the BYTES travel (peer transfers and store fetches ship the payload;
+    ``peer_copy`` strips the memo), but once a boot on this host deserializes
+    the executable it parks the loaded handle here — the analogue of an OS
+    page-cache-warm binary: the next boot of the same image on the same host
+    maps the code instead of re-linking it. XLA executables are immutable and
+    thread-safe to execute, so sharing the handle across executors is safe —
+    the same property the fork driver's donor aliasing already relies on.
+
+    Tier byte accounting covers the payload only: the loaded handle's code
+    bytes are on the order of the payload (XLA AOT serializes the compiled
+    artifact) and live exactly as long as the entry, so the bound is ~2x in
+    the worst case rather than exact — the price of not being able to ask XLA
+    for a loaded executable's footprint.
+    """
+
+    __slots__ = ("payload", "loaded")
+
+    def __init__(self, payload: bytes, loaded: Optional[Callable] = None) -> None:
+        self.payload = payload
+        self.loaded = loaded
+
+    @property
+    def nbytes(self) -> int:
+        return len(self.payload)
+
+    def peer_copy(self) -> "ProgramArtifact":
+        """What a peer actually receives: the bytes, never this host's memo."""
+        return ProgramArtifact(self.payload)
+
+
+class CacheDirectory:
+    """Fleet-wide view of which hosts hold which artifact (for peer fetches).
+
+    Hosts publish on insert and withdraw on evict; lookups return host ids, and
+    the scheduler resolves them against liveness at fetch time — a dead owner
+    is just skipped, exactly like a peer that stopped answering.
+    """
+
+    def __init__(self) -> None:
+        self._owners: Dict[Tuple[str, str], Set[int]] = {}
+        self._lock = threading.Lock()
+
+    def publish(self, tier: str, key: str, host_id: int) -> None:
+        with self._lock:
+            self._owners.setdefault((tier, key), set()).add(host_id)
+
+    def withdraw(self, tier: str, key: str, host_id: int) -> None:
+        with self._lock:
+            owners = self._owners.get((tier, key))
+            if owners is not None:
+                owners.discard(host_id)
+                if not owners:
+                    del self._owners[(tier, key)]
+
+    def owners(self, tier: str, key: str) -> Set[int]:
+        with self._lock:
+            return set(self._owners.get((tier, key), ()))
+
+
+class HostArtifactCache:
+    """One host's tiered RAM cache: program payload bytes + snapshot host trees.
+
+    The program tier holds serialized executable payloads (deserialization is
+    still per-boot — executors are per-request); the snapshot tier holds the
+    restored host-leaf tree so a repeat boot skips the store read entirely.
+    Byte accounting uses each artifact's logical size, and every miss records
+    where the bytes came from (peer vs global store) with the configured
+    simulated transfer cost.
+    """
+
+    def __init__(self, host_id: int, cfg: SchedulerConfig,
+                 directory: CacheDirectory) -> None:
+        self.host_id = host_id
+        self.cfg = cfg
+        self.directory = directory
+        self.programs = LruTier(
+            cfg.program_tier_bytes,
+            on_evict=lambda key: directory.withdraw(PROGRAM_TIER, key, host_id))
+        self.snapshots = LruTier(
+            cfg.snapshot_tier_bytes,
+            on_evict=lambda key: directory.withdraw(SNAPSHOT_TIER, key, host_id))
+        # set by the Scheduler once the cluster exists: (tier, key, requester)
+        # -> (value, nbytes) read out of a live peer's tier, or None
+        self.peer_lookup: Optional[Callable[[str, str, int],
+                                            Optional[Tuple[Any, int]]]] = None
+        self._lock = threading.Lock()
+        self.peer_fetches = 0
+        self.store_fetches = 0
+        self.peer_serves = 0            # reads served TO other hosts
+
+    def tier(self, name: str) -> LruTier:
+        return self.programs if name == PROGRAM_TIER else self.snapshots
+
+    # ------------------------------------------------------------------- get
+    def get(self, tier: str, key: str) -> Optional[Any]:
+        return self.tier(tier).get(key)
+
+    def fetch_from_peer(self, tier: str, key: str) -> Optional[Any]:
+        """Try to pull a missing artifact out of a live peer's tier.
+
+        On success the simulated peer-transfer cost is charged, the artifact is
+        inserted locally (and published), and the value returned.
+        """
+        if self.peer_lookup is None:
+            return None
+        found = self.peer_lookup(tier, key, self.host_id)
+        if found is None:
+            return None
+        value, nbytes = found
+        if hasattr(value, "peer_copy"):
+            value = value.peer_copy()      # bytes travel; loaded memos don't
+        with self._lock:
+            self.peer_fetches += 1
+        self._simulate(nbytes, self.cfg.sim_peer_s_per_gb)
+        self.insert(tier, key, value, nbytes)
+        return value
+
+    def fetch_from_store(self, tier: str, key: str, value: Any,
+                         nbytes: int) -> Any:
+        """Account a global-store fetch the caller already performed: charge
+        the simulated store latency and insert the artifact locally."""
+        with self._lock:
+            self.store_fetches += 1
+        self._simulate(nbytes, self.cfg.sim_store_s_per_gb)
+        self.insert(tier, key, value, nbytes)
+        return value
+
+    def insert(self, tier: str, key: str, value: Any, nbytes: int) -> None:
+        if self.tier(tier).put(key, value, nbytes):
+            self.directory.publish(tier, key, self.host_id)
+
+    @staticmethod
+    def _simulate(nbytes: int, s_per_gb: float) -> None:
+        if s_per_gb > 0.0 and nbytes > 0:
+            time.sleep(nbytes * s_per_gb / 1e9)
+
+    def summary(self) -> Dict[str, Any]:
+        with self._lock:
+            peer_fetches, store_fetches = self.peer_fetches, self.store_fetches
+            peer_serves = self.peer_serves
+        return {
+            "program": self.programs.stats(),
+            "snapshot": self.snapshots.stats(),
+            "peer_fetches": peer_fetches,
+            "store_fetches": store_fetches,
+            "peer_serves": peer_serves,
+        }
+
+
+class Scheduler:
+    """Cache-affinity placement over a Cluster's hosts.
+
+    ``select`` scores every candidate host as ``load - affinity_weight * a``
+    where ``a`` is 1.0 for a host already caching the program artifact, 0.75
+    for a host in the artifact's HRW replica set (it will cache it after one
+    boot and *stay* preferred — rendezvous hashing keeps the mapping stable as
+    hosts come and go), plus 0.25 if the weight snapshot is resident. Load is
+    in-flight requests, so a busy preferred host loses to an idle sibling once
+    the gap exceeds the affinity weight — locality never starves throughput.
+    """
+
+    def __init__(self, cluster, cfg: Optional[SchedulerConfig] = None) -> None:
+        self.cluster = cluster
+        self.cfg = cfg or SchedulerConfig()
+        self.directory = CacheDirectory()
+        self._rr = 0
+        self._lock = threading.Lock()
+        self.routed = 0
+        self.affinity_routed = 0        # landed on a host already caching the program
+
+    def make_cache(self, host_id: int) -> HostArtifactCache:
+        cache = HostArtifactCache(host_id, self.cfg, self.directory)
+        cache.peer_lookup = self._peer_lookup
+        return cache
+
+    # --------------------------------------------------------------- routing
+    def select(self, image_key: Optional[str] = None,
+               bucket_rows: Optional[int] = None,
+               exclude: Optional[set] = None, strict: bool = False):
+        """Pick a host, or return None when no (acceptable) host is alive.
+
+        ``strict`` refuses to fall back into the excluded set — the hedge path
+        uses it so a backup can never land on the host it is hedging against.
+        """
+        exclude = exclude or set()
+        alive = self.cluster.alive_hosts()
+        if not alive:
+            return None
+        candidates = [h for h in alive if h.host_id not in exclude]
+        if not candidates:
+            if strict:
+                return None
+            candidates = alive                 # retry beats failing outright
+        with self._lock:
+            self._rr += 1
+            rr = self._rr
+        if image_key is not None:
+            with self._lock:
+                self.routed += 1
+        if image_key is None or self.cfg.affinity_weight <= 0.0:
+            chosen = min(candidates,
+                         key=lambda h: (h.load, (h.host_id + rr) % len(candidates)))
+        else:
+            pkey = program_artifact_key(image_key, bucket_rows)
+            preferred = set(hrw_hosts(pkey, [h.host_id for h in alive],
+                                      self.cfg.replicas))
+
+            def cost(h) -> float:
+                cache = getattr(h, "cache", None)
+                affinity = 0.0
+                if cache is not None and cache.programs.contains(pkey):
+                    affinity = 1.0
+                elif h.host_id in preferred:
+                    affinity = 0.75
+                if cache is not None and cache.snapshots.contains(image_key):
+                    affinity += 0.25
+                return h.load - self.cfg.affinity_weight * affinity
+
+            chosen = min(candidates,
+                         key=lambda h: (cost(h), (h.host_id + rr) % len(candidates)))
+            cache = getattr(chosen, "cache", None)
+            if cache is not None and cache.programs.contains(pkey):
+                with self._lock:
+                    self.affinity_routed += 1
+        return chosen
+
+    # ----------------------------------------------------------- peer lookup
+    def _peer_lookup(self, tier: str, key: str,
+                     requester_id: int) -> Optional[Tuple[Any, int]]:
+        for hid in sorted(self.directory.owners(tier, key) - {requester_id}):
+            if not (0 <= hid < len(self.cluster.hosts)):
+                continue
+            host = self.cluster.hosts[hid]
+            cache = getattr(host, "cache", None)
+            if not host.alive or cache is None:
+                continue
+            entry = cache.tier(tier).peek(key)
+            if entry is not None:
+                with cache._lock:
+                    cache.peer_serves += 1
+                return entry
+        return None
+
+    # --------------------------------------------------------------- reports
+    def summary(self) -> Dict[str, Any]:
+        hosts: Dict[int, Dict[str, Any]] = {}
+        agg = {"program": [0, 0], "snapshot": [0, 0]}       # [hits, misses]
+        peer_fetches = store_fetches = 0
+        for h in self.cluster.hosts:
+            cache = getattr(h, "cache", None)
+            if cache is None:
+                continue
+            s = cache.summary()
+            s["alive"] = h.alive
+            s["load"] = h.load
+            hosts[h.host_id] = s
+            for tier in ("program", "snapshot"):
+                agg[tier][0] += int(s[tier]["hits"])
+                agg[tier][1] += int(s[tier]["misses"])
+            peer_fetches += s["peer_fetches"]
+            store_fetches += s["store_fetches"]
+        with self._lock:
+            routed, affinity_routed = self.routed, self.affinity_routed
+        def rate(hits: int, misses: int) -> float:
+            return hits / (hits + misses) if hits + misses else 0.0
+        return {
+            "hosts": hosts,
+            "program_hit_rate": rate(*agg["program"]),
+            "snapshot_hit_rate": rate(*agg["snapshot"]),
+            "peer_fetches": peer_fetches,
+            "store_fetches": store_fetches,
+            "routed": routed,
+            "affinity_routed": affinity_routed,
+            "replicas": self.cfg.replicas,
+            "affinity_weight": self.cfg.affinity_weight,
+        }

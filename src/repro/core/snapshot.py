@@ -163,6 +163,12 @@ class SnapshotStore:
                       if p.is_dir() and not p.name.endswith(".tmp"))
 
 
+def tree_host_nbytes(tree) -> int:
+    """Total bytes of a host-leaf tree — the snapshot tier's accounting unit
+    (repro.core.scheduler byte-bounds its per-host RAM caches with this)."""
+    return int(sum(getattr(leaf, "nbytes", 0) for leaf in jax.tree.leaves(tree)))
+
+
 # --------------------------------------------------------------- generic ckpt
 
 def save_generic_checkpoint(path: str | Path, params) -> int:

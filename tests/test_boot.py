@@ -168,19 +168,25 @@ def test_per_stage_timings_populated_for_every_driver(gateway, driver):
     assert tl.stage_s, f"driver {driver} recorded no boot stages"
     assert all(v >= 0.0 for v in tl.stage_s.values())
     assert tl.t_boot_wall > 0.0
+    # the fetch/restore stages record WHERE the artifact came from (host tier,
+    # peer, or global store — repro.core.scheduler), so any one variant counts
+    fetch_variants = {"fetch_program", "fetch_program_cached", "fetch_peer"}
+    restore_variants = {"restore_weights_host", "restore_weights_cached",
+                        "restore_weights_peer"}
     expected = {
-        "process": {"reuse_donor"},
-        "fork": {"alias_donor", "finalize"},
-        "unikernel": {"fetch_program", "deserialize_program",
-                      "restore_weights_host", "device_put", "finalize"},
-        "paused": {"fetch_parked", "device_put", "finalize"},
-        "cold_jit": {"trace_compile", "restore_weights_host", "device_put",
-                     "finalize"},
-        "cold_jit_cached": {"trace_compile", "restore_weights_host",
-                            "device_put", "finalize"},
+        "process": [{"reuse_donor"}],
+        "fork": [{"alias_donor", "finalize"}],
+        "unikernel": [fetch_variants, {"deserialize_program"}, restore_variants,
+                      {"device_put"}, {"finalize"}],
+        "paused": [{"fetch_parked"}, {"device_put"}, {"finalize"}],
+        "cold_jit": [{"trace_compile"}, {"restore_weights_host"},
+                     {"device_put"}, {"finalize"}],
+        "cold_jit_cached": [{"trace_compile"}, {"restore_weights_host"},
+                            {"device_put"}, {"finalize"}],
     }.get(driver)
     if expected is not None:
-        assert expected <= set(tl.stage_s), (driver, tl.stage_s)
+        for variants in expected:
+            assert variants & set(tl.stage_s), (driver, variants, tl.stage_s)
 
 
 def test_stage_sums_consistent_with_e2e(gateway):
@@ -208,8 +214,10 @@ def test_warm_cold_miss_records_fallback_stage_timings(gateway):
     gw.invoke(spec.name, driver="warm", label="warmmiss")
     tl = gw.recorder.timelines("warmmiss")[-1]
     # the miss fell back to the unikernel plan — its stages must be visible
-    assert {"deserialize_program", "restore_weights_host",
-            "device_put"} <= set(tl.stage_s), tl.stage_s
+    # (the weight restore may have been served from the host tier)
+    assert {"deserialize_program", "device_put"} <= set(tl.stage_s), tl.stage_s
+    assert {"restore_weights_host", "restore_weights_cached",
+            "restore_weights_peer"} & set(tl.stage_s), tl.stage_s
     for host in gw.cluster.hosts:                         # pools are per-host:
         host.drivers["warm"].prewarm(dep, 1)              # guarantee a hit
     gw.invoke(spec.name, driver="warm", label="warmhit")
