@@ -17,7 +17,13 @@ Three workloads:
   model, with per-host tiers sized to hold ONE function's artifacts so
   placement alone decides whether hosts thrash their caches. Emits
   ``placement/*`` rows: program/snapshot tier hit rates, peer vs store
-  fetches, and cold end-to-end latency.
+  fetches, and cold end-to-end latency;
+* ``delta_sweep`` — the chunked-snapshot (repro.core.blobstore) bench: hosts
+  warm with a base snapshot restore VERSIONS of it whose content differs by a
+  controlled fraction. Under delta restore only the changed chunks move, so
+  bytes fetched from the store (and shipped from a peer) must scale with the
+  delta, not the snapshot size — ``delta_sweep/*`` rows feed the DELTA_TABLE
+  in EXPERIMENTS.md.
 
 ``--smoke`` runs a tiny coalesced-cold sweep and exits nonzero if
 boots-per-request regresses to >= 1.0 (i.e. coalescing stopped engaging);
@@ -221,6 +227,84 @@ def placement_sweep(make_gateway, hosts: int = 4, rate_rps: float = 6.0,
     return cells
 
 
+def delta_sweep(fracs=(0.0, 0.25, 0.5, 1.0), n_leaves: int = 128,
+                leaf_bytes: int = 64 << 10) -> list:
+    """Delta restore: bytes moved must scale with the CONTENT delta.
+
+    A 2-host cluster shares one chunked snapshot store. Both hosts warm their
+    chunk tiers with a base snapshot (host 0 from the global store, host 1
+    from its peer). Then, for each fraction f, a new VERSION of the snapshot
+    is written in which f of the leaves were mutated — under chunk-level
+    dedup its manifest shares (1-f) of its chunks with the base — and each
+    host delta-restores it: host 0's missing chunks come from the global
+    store, host 1's from its peer (which just restored the same version).
+    Both paths are charged the simulated transfer cost on the bytes that
+    actually moved, so restore time falls out of the delta too. The v1
+    comparison is implicit: without chunking every row would fetch
+    ``total_mb`` regardless of f.
+    """
+    import shutil
+    import tempfile
+
+    import numpy as np
+
+    from repro.core.blobstore import ChunkStore, delta_restore
+    from repro.core.cluster import Cluster
+    from repro.core.scheduler import SchedulerConfig
+    from repro.core.snapshot import SnapshotStore
+
+    rng = np.random.default_rng(0)
+    base = {f"layer{i:03d}": rng.standard_normal(leaf_bytes // 8)
+            for i in range(n_leaves)}
+    work = tempfile.mkdtemp(prefix="repro_delta_")
+    blobs = ChunkStore(Path(work) / "blobs")
+    store = SnapshotStore(Path(work) / "snaps", blobs=blobs)
+    store.save("base", base)
+
+    cfg = SchedulerConfig(sim_store_s_per_gb=SIM_STORE_S_PER_GB,
+                          sim_peer_s_per_gb=SIM_PEER_S_PER_GB,
+                          snapshot_tier_bytes=4 << 30)
+    cluster = Cluster(n_hosts=2, scheduler=cfg)
+    cells = []
+    try:
+        host_store, host_peer = cluster.hosts[0], cluster.hosts[1]
+        delta_restore(store, "base", host_store.cache)   # warm via global store
+        delta_restore(store, "base", host_peer.cache)    # warm via peer
+        for i, frac in enumerate(fracs):
+            version = dict(base)
+            mutated = sorted(base)[:int(n_leaves * frac)]
+            vrng = np.random.default_rng(100 + i)
+            for k in mutated:
+                version[k] = base[k] + vrng.standard_normal(base[k].shape)
+            name = f"v{frac:g}"
+            store.save(name, version)
+            for source, host in (("store", host_store), ("peer", host_peer)):
+                t0 = time.perf_counter()
+                _, stats = delta_restore(store, name, host.cache)
+                restore_s = time.perf_counter() - t0
+                cell = {
+                    "source": source, "frac": frac,
+                    "total_mb": stats.bytes_total / 1e6,
+                    "fetched_mb": stats.bytes_fetched / 1e6,
+                    "deduped_mb": stats.bytes_deduped / 1e6,
+                    "fetched_frac": stats.bytes_fetched / max(stats.bytes_total, 1),
+                    "restore_ms": restore_s * 1e3,
+                    "bytes_from_peer": stats.bytes_from_peer,
+                    "bytes_from_store": stats.bytes_from_store,
+                }
+                cells.append(cell)
+                emit(f"delta_sweep/{source}/f{frac:g}", cell["fetched_mb"],
+                     f"total_mb={cell['total_mb']:.1f};"
+                     f"fetched_mb={cell['fetched_mb']:.1f};"
+                     f"deduped_mb={cell['deduped_mb']:.1f};"
+                     f"fetched_frac={cell['fetched_frac']:.3f};"
+                     f"restore_ms={cell['restore_ms']:.1f}")
+    finally:
+        cluster.shutdown()
+        shutil.rmtree(work, ignore_errors=True)
+    return cells
+
+
 def run(make_gateway, samples_scale: float = 1.0) -> None:
     spec = bench_spec()
 
@@ -243,6 +327,7 @@ def run(make_gateway, samples_scale: float = 1.0) -> None:
 
     load_sweep(make_gateway)
     placement_sweep(make_gateway)
+    delta_sweep()
 
 
 def smoke_placement(hosts: int = 4, rate_rps: float = 30.0,

@@ -98,6 +98,48 @@ def startup_breakdown_table() -> str:
     return "\n".join(rows)
 
 
+def delta_table() -> str:
+    """Chunked-snapshot delta restore: bytes fetched vs delta size, per source
+    (peer / store), from the ``delta_sweep/*`` rows bench_e2e.py emits; plus
+    the warm-tier restore-time comparison rows (``delta/*``) from
+    bench_startup.py."""
+    csv = ART.parent / "bench_rows.csv"
+    if not csv.exists():
+        return "(run benchmarks/run.py to populate)"
+    sweep = []          # (source, frac, derived-dict)
+    timing = []         # (name, value_us, derived)
+    for line in csv.read_text().splitlines()[1:]:
+        parts = line.split(",", 2)
+        if len(parts) < 2:
+            continue
+        derived = dict(kv.split("=", 1) for kv in parts[2].split(";")
+                       if "=" in kv) if len(parts) > 2 else {}
+        if parts[0].startswith("delta_sweep/"):
+            _, source, frac = parts[0].split("/", 2)
+            sweep.append((source, frac.removeprefix("f"), derived))
+        elif parts[0].startswith("delta/"):
+            timing.append((parts[0].split("/", 1)[1], float(parts[1]), derived))
+    if not sweep and not timing:
+        return "(no delta rows in bench_rows.csv)"
+    rows = []
+    if sweep:
+        rows += ["| source | delta frac | MB fetched | MB deduped | "
+                 "fetched/total | restore ms |",
+                 "|---|---|---|---|---|---|"]
+        for source, frac, d in sweep:
+            rows.append(
+                f"| {source} | {frac} | {d.get('fetched_mb', '—')} "
+                f"| {d.get('deduped_mb', '—')} | {d.get('fetched_frac', '—')} "
+                f"| {d.get('restore_ms', '—')} |")
+    if timing:
+        rows += ["", "Restore-time comparison (same snapshot, unchanged):", "",
+                 "| path | ms | notes |", "|---|---|---|"]
+        for name, value_us, d in timing:
+            notes = ";".join(f"{k}={v}" for k, v in d.items())
+            rows.append(f"| {name} | {value_us/1e3:.2f} | {notes} |")
+    return "\n".join(rows)
+
+
 def coalescing_table() -> str:
     """Open-loop load sweep: cold vs cold+coalesced vs warm at equal arrival
     rates, from the ``e2e_load/*`` rows bench_e2e.py writes to bench_rows.csv."""
@@ -179,6 +221,10 @@ SKELETON = """# Experiments
 
 <!-- STARTUP_TABLE -->
 
+## Delta restore (chunked snapshots)
+
+<!-- DELTA_TABLE -->
+
 ## Coalescing under open-loop load
 
 <!-- COALESCING_TABLE -->
@@ -201,40 +247,61 @@ SKELETON = """# Experiments
 """
 
 
+# (tag, section title used when the marker is missing and the section must be
+# appended, table renderer) — order = document order for appended sections
+TABLES = (
+    ("STARTUP_TABLE", "Startup breakdown (per boot stage)",
+     startup_breakdown_table),
+    ("DELTA_TABLE", "Delta restore (chunked snapshots)", delta_table),
+    ("COALESCING_TABLE", "Coalescing under open-loop load", coalescing_table),
+    ("PLACEMENT_TABLE", "Placement under multi-host load", placement_table),
+    ("DRYRUN_TABLE", "Multi-pod dry run", dryrun_table),
+    ("ROOFLINE_TABLE", "Roofline", roofline_table),
+    ("VARIANTS_TABLE", "Variants", variants_table),
+)
+
+
 def main() -> None:
     path = ROOT / "EXPERIMENTS.md"
     md = path.read_text() if path.exists() else SKELETON
-    if "STARTUP_TABLE" not in md:
-        md += "\n## Startup breakdown (per boot stage)\n\n<!-- STARTUP_TABLE -->\n"
-    if "COALESCING_TABLE" not in md:
-        md += "\n## Coalescing under open-loop load\n\n<!-- COALESCING_TABLE -->\n"
-    if "PLACEMENT_TABLE" not in md:
-        md += "\n## Placement under multi-host load\n\n<!-- PLACEMENT_TABLE -->\n"
+
     def safe(fn):
         try:
             return fn()
         except Exception as e:          # missing artifacts shouldn't kill the report
             return f"(unavailable: {e})"
 
-    startup = safe(startup_breakdown_table)
-    md = _replace(md, "STARTUP_TABLE", startup)
-    md = _replace(md, "COALESCING_TABLE", safe(coalescing_table))
-    md = _replace(md, "PLACEMENT_TABLE", safe(placement_table))
-    md = _replace(md, "DRYRUN_TABLE", safe(dryrun_table))
-    md = _replace(md, "ROOFLINE_TABLE", safe(roofline_table))
-    md = _replace(md, "VARIANTS_TABLE", safe(variants_table))
+    rendered = {}
+    for tag, title, fn in TABLES:
+        rendered[tag] = safe(fn)
+        md = _replace(md, tag, rendered[tag], title=title)
     path.write_text(md)
     print("EXPERIMENTS.md tables updated")
-    print(startup)
+    print(rendered["STARTUP_TABLE"])
 
 
-def _replace(md: str, tag: str, content: str) -> str:
+def _replace(md: str, tag: str, content: str, title: str = None) -> str:
+    """Idempotently install ``content`` between ``<!-- tag --> .. <!-- /tag -->``.
+
+    Three cases, none of which may drop output:
+    * both markers present — substitute the span (function replacement, so
+      backslashes/group refs in table content are never interpreted as regex
+      escapes; running twice yields byte-identical output);
+    * only the open marker — expand it into the delimited block;
+    * no marker at all — APPEND a new titled section carrying the block, so a
+      hand-edited EXPERIMENTS.md that lost a marker still receives the table.
+    """
+    import re
     marker = f"<!-- {tag} -->"
     block = f"{marker}\n{content}\n<!-- /{tag} -->"
     if f"<!-- /{tag} -->" in md:
-        import re
-        return re.sub(rf"<!-- {tag} -->.*?<!-- /{tag} -->", block, md, flags=re.S)
-    return md.replace(marker, block)
+        pattern = re.compile(
+            rf"<!-- {re.escape(tag)} -->.*?<!-- /{re.escape(tag)} -->", re.S)
+        return pattern.sub(lambda _m: block, md, count=1)
+    if marker in md:
+        return md.replace(marker, block, 1)
+    heading = f"## {title or tag}" if title or tag else ""
+    return f"{md.rstrip()}\n\n{heading}\n\n{block}\n"
 
 
 if __name__ == "__main__":

@@ -2,6 +2,12 @@
 XLA-compiled model functions (see DESIGN.md Sec 2-4 for the unikernel mapping)."""
 from repro.core.artifact import ExecutorImage, FunctionSpec, ImageManifest  # noqa: F401
 from repro.core.batching import BatchingConfig, CoalescedBatch, Coalescer  # noqa: F401
+from repro.core.blobstore import (  # noqa: F401
+    ChunkStore,
+    DeltaStats,
+    HostChunkTier,
+    delta_restore,
+)
 from repro.core.boot import (  # noqa: F401
     ENGINE,
     BootCancelled,

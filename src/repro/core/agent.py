@@ -9,6 +9,12 @@ The agent is also the claim point for *speculative pre-boots*: the dispatcher
 may have launched the executor boot (via ``preboot``) while the request was
 still queued; ``handle`` then claims the finished boot instead of starting a
 fresh one, and the boot's per-stage timings land in the request's Timeline.
+
+Invariants: a crashed executor never returns to a pool (it exits, so retries
+always get a FRESH one); every exited executor's residency is accounted
+exactly once; shared donors are never exited by a request path; one coalesced
+batch = one boot, with one member Timeline per request (own enqueue stamp,
+shared boot/exec stamps).
 """
 from __future__ import annotations
 
@@ -60,7 +66,9 @@ class Agent:
             except BootCancelled:
                 pass                          # lost a race — boot fresh below
             else:
-                tl.record_boot(result.stage_s, result.wall_s)
+                tl.record_boot(result.stage_s, result.wall_s,
+                               bytes_fetched=result.bytes_fetched,
+                               bytes_deduped=result.bytes_deduped)
                 tl.preboot = True
                 return result.executor
         return driver.start(dep, tl, bucket_rows=bucket_rows)

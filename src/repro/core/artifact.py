@@ -12,6 +12,10 @@ single-purpose executor artifact for exactly one (architecture x request-shape x
 Nothing generic ships in the image: no tracing machinery, no dynamic shapes, no
 warm-pool bookkeeping. That specialization is what makes the cold path fast — the
 same bet IncludeOS makes by dropping the general-purpose OS.
+
+Invariants: ``FunctionSpec.cache_key()`` is a pure function of the spec — the
+one identity every store (compile cache, snapshot store, host tiers,
+placement) keys on; specs and manifests are immutable once built.
 """
 from __future__ import annotations
 

@@ -9,6 +9,13 @@ experiencing frequent cold starts" (Sec IV).
 ``ColdOnlyScaler`` is the paper's proposal: nothing. Scaling IS the request queue —
 every request starts its own executor which exits on completion. The class exists so
 both modes expose the same interface and the benchmark can report both.
+
+Invariants: each tick moves every (function, host) pool toward the per-host
+share of the Little's-law target — prewarm when under, expire when over — and
+the target decays to zero only after ``idle_timeout_s`` without arrivals;
+expired executors always exit through ``on_exit`` so their HBM residency is
+accounted, never silently dropped; ``per_host_residency`` is zero by
+construction in cold mode.
 """
 from __future__ import annotations
 

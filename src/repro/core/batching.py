@@ -23,6 +23,12 @@ blows up past the core count). The :class:`Coalescer` attacks the per-request
 In cold mode one unikernel boot now serves N coalesced requests:
 boots-per-request drops from 1.0 toward 1/max_batch while every request keeps
 its own queue-delay accounting (Timeline.batch_size / boots_share).
+
+Invariants: whole-batch retry = every member exactly once per attempt (the
+batch rides the dispatcher as ONE unit — no member is ever re-dispatched solo
+or dropped); every submitted Future settles exactly once, including on drain
+at shutdown; only batch-capable drivers coalesce — pool/donor drivers bypass
+the layer untouched; padding rows never reach a caller.
 """
 from __future__ import annotations
 

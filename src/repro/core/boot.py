@@ -19,6 +19,13 @@ Every stage's duration lands in ``Timeline.stage_s[stage.name]`` and the
 combined wall time in ``Timeline.t_boot_wall``, so the benchmarks can report a
 per-stage startup breakdown exactly like the paper's container-layer tables —
 and show the overlap win directly (wall < sum of stages).
+
+Invariants: a weights-track stage never reads context fields a program-track
+stage writes (and vice versa) — cross-track products meet only at JOIN
+stages; cancellation lands at stage boundaries and a cancelled or failed boot
+disposes everything it materialized (no leaked executors or device memory);
+stage names are unique per plan, and a stage that rebinds its name records
+under the path that actually ran.
 """
 from __future__ import annotations
 
@@ -87,6 +94,11 @@ class BootContext:
         self.params: Any = None
         self.shared_weights: bool = False
         self.executor: Optional[Executor] = None
+        # delta-restore accounting: bytes that actually moved for this boot
+        # vs bytes already resident in the host chunk tier (dedup). Written
+        # only by the weights track; read by the engine after the tracks join.
+        self.bytes_fetched: int = 0
+        self.bytes_deduped: int = 0
 
 
 class Stage:
@@ -96,7 +108,13 @@ class Stage:
     stage whose work depends on which path it took at runtime — host-tier hit,
     peer transfer, global-store fetch — may rebind ``self.name`` inside
     ``run`` and the engine records its duration under the name that actually
-    happened (e.g. ``fetch_program_cached`` vs ``fetch_peer``).
+    happened (e.g. ``fetch_program_cached`` vs ``fetch_peer``). A stage may
+    also set ``self.extra_s`` (sub-stage name -> seconds) inside ``run``; the
+    engine records those splits beside the stage and carves them OUT of the
+    stage's own time, so ``stage_s`` stays a partition of real work. The
+    splits live on the stage instance, not the shared context — the engine
+    reads them on the thread that ran the stage, so a concurrently-finishing
+    stage on the other track can never consume them.
     """
 
     name: str = "stage"
@@ -197,7 +215,17 @@ class TraceCompile(Stage):
 
 
 class RestoreWeightsHost(Stage):
-    """Materialize host-side weights: snapshot mmap (cheap) or generic parse+cast."""
+    """Materialize host-side weights: delta restore from the chunk tier
+    (v2 snapshots), snapshot mmap (v1), or generic parse+cast.
+
+    With a host chunk tier and a chunked (v2) snapshot this is a DELTA
+    restore: only chunks missing from the tier move — live peer first, global
+    store last — and the stage records which path it took: a fully-memoized
+    tree is ``restore_weights_cached``; otherwise the stage lands as
+    ``restore_delta`` with ``fetch_chunks_peer``/``fetch_chunks_store``
+    sub-timings, and the moved/skipped bytes go to
+    ``Timeline.bytes_fetched``/``bytes_deduped``.
+    """
 
     name = "restore_weights_host"
     track = TRACK_WEIGHTS
@@ -215,21 +243,23 @@ class RestoreWeightsHost(Stage):
             return
         cache = getattr(ctx.host, "cache", None)
         key = dep.image.key
-        if cache is not None:
-            tree = cache.get("snapshot", key)
-            if tree is not None:               # host-leaf tree already in RAM
+        if dep.snapshots.blobs is not None and dep.snapshots.is_chunked(key):
+            from repro.core.blobstore import delta_restore
+            tree, stats = delta_restore(dep.snapshots, key, cache)
+            if stats.source == "cached":
                 self.name = "restore_weights_cached"
-                ctx.host_params = tree
-                return
-            tree = cache.fetch_from_peer("snapshot", key)
-            if tree is not None:
-                self.name = "restore_weights_peer"
-                ctx.host_params = tree
-                return
+            elif cache is not None:
+                self.name = "restore_delta"
+                self.extra_s = {}
+                if stats.t_peer_s > 0.0:
+                    self.extra_s["fetch_chunks_peer"] = stats.t_peer_s
+                if stats.t_store_s > 0.0:
+                    self.extra_s["fetch_chunks_store"] = stats.t_store_s
+            ctx.bytes_fetched += stats.bytes_fetched
+            ctx.bytes_deduped += stats.bytes_deduped
+            ctx.host_params = tree
+            return
         tree = dep.snapshots.load_host(key, mmap=self.mmap)
-        if cache is not None:
-            from repro.core.snapshot import tree_host_nbytes
-            cache.fetch_from_store("snapshot", key, tree, tree_host_nbytes(tree))
         ctx.host_params = tree
 
 
@@ -417,10 +447,13 @@ class BootPlan:
 
 class BootResult:
     def __init__(self, executor: Executor, stage_s: Dict[str, float],
-                 wall_s: float) -> None:
+                 wall_s: float, bytes_fetched: int = 0,
+                 bytes_deduped: int = 0) -> None:
         self.executor = executor
         self.stage_s = stage_s
         self.wall_s = wall_s
+        self.bytes_fetched = bytes_fetched
+        self.bytes_deduped = bytes_deduped
 
 
 class BootHandle:
@@ -493,7 +526,9 @@ class BootEngine:
         """Synchronous boot: run the plan, stamp ``tl``, return the executor."""
         result = self._run(plan, dep, driver_name, cancel=None,
                            bucket_rows=bucket_rows, host=host)
-        tl.record_boot(result.stage_s, result.wall_s)
+        tl.record_boot(result.stage_s, result.wall_s,
+                       bytes_fetched=result.bytes_fetched,
+                       bytes_deduped=result.bytes_deduped)
         return result.executor
 
     def launch(self, plan: BootPlan, dep, driver_name: str,
@@ -530,8 +565,18 @@ class BootEngine:
                         raise BootCancelled(f"cancelled before {stage.name}")
                     t0 = now()
                     stage.run(ctx)
+                    dt = now() - t0
+                    # sub-stage splits (e.g. restore_delta's chunk fetches)
+                    # are carved OUT of the parent stage's time, so stage_s
+                    # stays a partition of real work and sum(stage_s) - wall
+                    # remains pure overlap; read from THIS stage's instance,
+                    # on this track's thread — never from shared state
+                    extras = getattr(stage, "extra_s", None)
                     with timing_lock:
-                        stage_s[stage.name] = now() - t0
+                        if extras:
+                            stage_s.update(extras)
+                            dt = max(0.0, dt - sum(extras.values()))
+                        stage_s[stage.name] = dt
             except BaseException as e:  # noqa: BLE001 - re-raised below
                 errors.append(e)
 
@@ -553,7 +598,9 @@ class BootEngine:
             self._dispose(ctx)
             raise errors[0]
         assert ctx.executor is not None, f"plan built no executor: {plan}"
-        return BootResult(ctx.executor, stage_s, now() - t_begin)
+        return BootResult(ctx.executor, stage_s, now() - t_begin,
+                          bytes_fetched=ctx.bytes_fetched,
+                          bytes_deduped=ctx.bytes_deduped)
 
     @staticmethod
     def _dispose(ctx: BootContext) -> None:

@@ -3,8 +3,8 @@
 Each Host models one machine: a bounded slot pool (the paper's 24-core server that
 degrades past 20 parallel starts), its own driver instances (so warm pools and fork
 donors are per-host state, exactly like container pools are per-machine), a tiered
-artifact cache (program payloads + snapshot host trees in host RAM — see
-repro.core.scheduler), and a liveness flag. ``kill()`` simulates node failure:
+artifact cache (program payloads + refcounted snapshot chunks in host RAM — see
+repro.core.scheduler and repro.core.blobstore), and a liveness flag. ``kill()`` simulates node failure:
 in-flight work raises HostFailure at the next lifecycle boundary and the dispatcher
 re-routes — stateless cold-only executors make this loss-free, which is the paper's
 predictability argument.
@@ -12,6 +12,11 @@ predictability argument.
 Routing lives in the Scheduler: ``route(image_key, bucket_rows)`` blends cache
 affinity (rendezvous-hashed replica sets + actual tier residency) with live load,
 so per-boot artifact cost drops as hosts are added instead of staying flat.
+
+Invariants: ``Host.load`` counts exactly the work that entered the pool —
+every increment has a matching decrement, including when the pool rejects a
+submission at shutdown (no phantom load); ``kill`` never loses accepted work
+silently — it surfaces as HostFailure for the dispatcher to retry.
 """
 from __future__ import annotations
 

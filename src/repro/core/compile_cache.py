@@ -13,6 +13,11 @@ Layout on disk (content-addressed by FunctionSpec.cache_key):
 Also exposes :func:`enable_xla_disk_cache` — the XLA persistent compilation cache,
 which is the ``cold_jit_cached`` (gVisor-tier) path: still re-traces, but the XLA
 compile itself becomes a disk hit.
+
+Invariants: ``put_compiled`` publishes atomically (a concurrent reader sees
+the old blob or the new one, never a torn write); payload bytes are immutable
+once published under a key — the host program tiers and peer transfers rely
+on byte-identical content per key.
 """
 from __future__ import annotations
 

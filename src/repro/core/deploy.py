@@ -5,9 +5,18 @@
   1. build the model and the single-purpose serve program (prefill + K greedy
      decode steps fused into ONE compiled callable — nothing generic),
   2. AOT-compile and serialize it into the CompileCache,
-  3. write the weight snapshot (pre-laid-out) and the generic checkpoint
-     (the slow-path comparison),
+  3. write the weight snapshot (pre-laid-out; chunked v2 when the store has a
+     blob store attached) and the generic checkpoint (the slow-path
+     comparison),
   4. record the ImageManifest.
+
+Invariants: every serialized image is verified by loading and running it once
+at deploy time — a host whose AOT loader rejects the blob degrades to the
+in-process program (flagged ``aot_verified: false``) instead of crashing
+executors; compiles happen at deploy time only (bucket shapes included via
+``ensure_bucket``, once per bucket, ever) — no request ever pays a compile;
+``program_key``/``bucket_image_key`` are the single source of truth shared
+with the scheduler's affinity probes and tier inserts.
 """
 from __future__ import annotations
 
@@ -194,12 +203,20 @@ def deploy(spec: FunctionSpec, cache: CompileCache, snapshots: SnapshotStore,
     save_generic_checkpoint(generic_ckpt, params)
 
     build_seconds = now() - t_begin
+    extra: Dict[str, Any] = {"aot_verified": fallback_program is None}
+    if snapshots.blobs is not None:
+        # chunked (v2) snapshot: record the manifest geometry so reports can
+        # show dedup (unique chunk bytes in the store vs logical bytes)
+        index = snapshots.read_index(key)
+        extra.update(snapshot_format=2,
+                     snapshot_chunks=sum(len(e["chunks"]) for e in index["leaves"]),
+                     chunk_bytes=index["chunk_bytes"])
     manifest = ImageManifest(
         key=key, function=spec.name,
         program_bytes=program_bytes, snapshot_bytes=snapshot_bytes,
         param_count=int(sum(np.prod(s.shape) for s in jax.tree.leaves(abstract_params))),
         built_at=now(), build_seconds=build_seconds,
-        extra={"aot_verified": fallback_program is None},
+        extra=extra,
     )
     cache.put_manifest(key, manifest)
     image = ExecutorImage(manifest=manifest, spec=spec)

@@ -18,6 +18,12 @@ routing is just least-loaded. What remains is what any large fleet needs:
   executor boot (via the agent's BootEngine handle) the moment a host is picked
   — while the request may still be waiting for a slot — and cancels it cleanly
   if a hedge or retry wins the race, so no device memory leaks from the loser.
+
+Invariants: a retry never re-lands on a host this request already touched;
+hedges are STRICT — a backup launches only on a distinct alive host and
+otherwise stands down (and is counted only when actually launched); the
+request's Future settles exactly once no matter how many attempts raced; a
+losing speculative boot is cancelled and any executor it built is exited.
 """
 from __future__ import annotations
 

@@ -17,6 +17,12 @@ shared stage vocabulary in :mod:`repro.core.boot`, and the shared ``start``
 body hands it to the BootEngine — which times every stage into
 ``Timeline.stage_s`` and overlaps the program and weights tracks. No driver
 hand-rolls a serial start path anymore.
+
+Invariants: only READY executors re-enter the warm pool (a crashed one would
+poison every later checkout); donors are shared, never exited by a request
+path, and evicted exactly once at shutdown so their residency is accounted;
+``supports_preboot``/``supports_batch`` gate speculation and coalescing to
+drivers whose plans are pure at declaration time.
 """
 from __future__ import annotations
 

@@ -8,6 +8,12 @@ A *cold-only* platform drives every executor straight to EXITED after one reques
 ("the unikernel simply exits, and, in parallel, the user gets back the result" —
 Sec IV-A); a *warm-pool* platform parks it READY (holding device memory) or PAUSED
 (host memory only), which is precisely the resource waste the paper eliminates.
+
+Invariants: ``exit`` is idempotent and drops the param references unless the
+weights are shared with a donor (``shared_weights`` — a fork clone must never
+free its donor's buffers); ``nbytes``/residency timers are stable after exit
+so accounting reads are race-free; params are treated as read-only by ``run``,
+which is what makes donor aliasing and assembled-tree memo sharing safe.
 """
 from __future__ import annotations
 

@@ -8,6 +8,11 @@ Composes the whole Fn-analogue stack:
 pools, trivial scaling); ``mode='warm'`` is the incumbent (warm pools + autoscaler
 + idle timeouts). Both run the same functions through the same dispatcher so the
 comparison in benchmarks/bench_e2e.py is apples-to-apples.
+
+Invariants: ``shutdown`` drains the coalescer (no Future left dangling) and
+flushes every pool and donor through the residency tracker — resident HBM is
+never silently dropped from the accounting; deployments are immutable once
+published to ``self.deployments``.
 """
 from __future__ import annotations
 
@@ -23,6 +28,7 @@ from repro.core.agent import Agent
 from repro.core.artifact import FunctionSpec
 from repro.core.autoscaler import ColdOnlyScaler, WarmPoolAutoscaler
 from repro.core.batching import BatchingConfig, Coalescer
+from repro.core.blobstore import ChunkStore
 from repro.core.cluster import Cluster
 from repro.core.compile_cache import CompileCache
 from repro.core.deploy import Deployment, deploy
@@ -43,7 +49,11 @@ class Gateway:
         self.work_dir = work_dir or tempfile.mkdtemp(prefix="repro_faas_")
         Path(self.work_dir).mkdir(parents=True, exist_ok=True)
         self.cache = CompileCache(Path(self.work_dir) / "images")
-        self.snapshots = SnapshotStore(Path(self.work_dir) / "snapshots")
+        # the global chunk store makes every snapshot a v2 chunk manifest:
+        # content-addressed, dedup'd across functions, delta-restorable
+        self.blobs = ChunkStore(Path(self.work_dir) / "blobs")
+        self.snapshots = SnapshotStore(Path(self.work_dir) / "snapshots",
+                                       blobs=self.blobs)
         self.recorder = Recorder()
         self.residency = ResidencyTracker()
         self.cluster = Cluster(n_hosts=n_hosts, slots_per_host=slots_per_host,

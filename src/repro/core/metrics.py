@@ -5,6 +5,12 @@ medians (Table I). ``LatencyStats`` reproduces exactly those statistics; ``Timel
 records the per-request phase breakdown (queue wait / startup / execution), mirroring
 the cold-start decomposition in Sec III-C; ``ResidencyTracker`` integrates
 device-memory-seconds so the warm-pool "resource waste" claim is measurable.
+
+Invariants: every request gets exactly one Timeline per recorder label (batch
+members each get their own view sharing the batch's boot/exec stamps but
+keeping their own enqueue stamp); ``t_boot_wall <= sum(stage_s)`` — the gap is
+the overlap win, never negative accounting; ``bytes_fetched``/``bytes_deduped``
+only ever accumulate (one delta restore per boot, summed across retries).
 """
 from __future__ import annotations
 
@@ -158,7 +164,8 @@ class Series:
 PROGRAM_STAGES = ("fetch_program", "fetch_program_cached", "fetch_peer",
                   "deserialize_program", "trace_compile", "fetch_parked")
 WEIGHT_STAGES = ("restore_weights_host", "restore_weights_cached",
-                 "restore_weights_peer", "device_put", "alias_donor")
+                 "restore_weights_peer", "restore_delta", "fetch_chunks_peer",
+                 "fetch_chunks_store", "device_put", "alias_donor")
 
 
 @dataclasses.dataclass
@@ -181,10 +188,19 @@ class Timeline:
     # Member timelines of one batch share every stamp except t_enqueue, so
     # queue_wait stays per-request while startup/execution are the batch's.
     batch_size: int = 1
+    # delta restore accounting (repro.core.blobstore): bytes that actually
+    # moved for this boot's weights vs bytes already resident in the host
+    # chunk tier. bytes_fetched << snapshot size is the dedup win.
+    bytes_fetched: float = 0.0
+    bytes_deduped: float = 0.0
 
-    def record_boot(self, stage_s: Dict[str, float], wall_s: float) -> None:
+    def record_boot(self, stage_s: Dict[str, float], wall_s: float,
+                    bytes_fetched: float = 0.0,
+                    bytes_deduped: float = 0.0) -> None:
         self.stage_s.update(stage_s)
         self.t_boot_wall += wall_s
+        self.bytes_fetched += bytes_fetched
+        self.bytes_deduped += bytes_deduped
 
     @property
     def t_program(self) -> float:

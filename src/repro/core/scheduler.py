@@ -10,13 +10,21 @@ global stores pays that cost N times and *grows* it with fleet size.
 
 This module converts the fleet into one cache hierarchy:
 
-* ``LruTier``       — a byte-accounted LRU over artifact bytes / host-leaf trees,
-                      with hit/miss/evict counters (one per host per artifact kind);
-* ``HostArtifactCache`` — the two tiers of one host (program payloads + snapshot
-                      host trees) plus peer/store fetch accounting and the
-                      simulated transfer-cost model;
-* ``CacheDirectory``— who holds what, so a missing host can fetch from a peer
-                      (cheap) instead of the global store (expensive);
+* ``LruTier``       — a byte-accounted LRU over program payload bytes, with
+                      hit/miss/evict counters (one per host);
+* ``HostArtifactCache`` — the two tiers of one host: program payloads
+                      (``LruTier``) and snapshot CHUNKS (a refcounted
+                      :class:`repro.core.blobstore.HostChunkTier` — dedup'd
+                      across functions, so two configs sharing base weights
+                      share chunk bytes), plus peer/store fetch accounting and
+                      the simulated transfer-cost model, which charges the
+                      bytes that actually moved (the delta), never whole
+                      snapshots;
+* ``CacheDirectory``— who holds what: hosts advertise the snapshots (and
+                      therefore the chunk ranges those manifests name) they
+                      hold, so a missing host fetches only its missing chunks
+                      from a peer (cheap) instead of the global store
+                      (expensive);
 * ``Scheduler``     — placement: rendezvous/HRW hashing gives every artifact a
                       stable k-replica preferred set (minimal reshuffle when
                       hosts die or join), blended with live load so a hot host
@@ -24,8 +32,15 @@ This module converts the fleet into one cache hierarchy:
 
 The boot pipeline consults the host tier before the global store and records
 which path it took as distinct Timeline stages (``fetch_program_cached``,
-``fetch_peer``, ``fetch_program``), so the benchmarks can show per-boot cost
-*dropping* as hosts are added instead of staying flat.
+``fetch_peer``, ``fetch_program``; ``restore_delta`` with
+``fetch_chunks_peer``/``fetch_chunks_store`` sub-stages on the weights track),
+so the benchmarks can show per-boot cost *dropping toward the delta* as
+hosts warm up instead of staying flat.
+
+Invariants: affinity probes (``LruTier.contains`` / ``HostChunkTier.contains``)
+never mutate counters or recency; peer reads never inflate the owner's local
+hit rate; hedges are strict — a backup that cannot land on a distinct host
+stands down rather than re-landing on the straggler's own machine.
 """
 from __future__ import annotations
 
@@ -35,6 +50,8 @@ import threading
 import time
 from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.core.blobstore import HostChunkTier
 
 
 @dataclasses.dataclass(frozen=True)
@@ -235,16 +252,26 @@ class CacheDirectory:
         with self._lock:
             return set(self._owners.get((tier, key), ()))
 
+    def tier_owners(self, tier: str) -> Set[int]:
+        """Every host holding ANYTHING in this tier — the chunk-range
+        advertisement's fallback: a host that never held snapshot X may still
+        hold most of X's chunks via a sibling config sharing base weights."""
+        with self._lock:
+            return {hid for (t, _), hids in self._owners.items()
+                    if t == tier for hid in hids}
+
 
 class HostArtifactCache:
-    """One host's tiered RAM cache: program payload bytes + snapshot host trees.
+    """One host's tiered RAM cache: program payload bytes + snapshot chunks.
 
     The program tier holds serialized executable payloads (deserialization is
-    still per-boot — executors are per-request); the snapshot tier holds the
-    restored host-leaf tree so a repeat boot skips the store read entirely.
-    Byte accounting uses each artifact's logical size, and every miss records
-    where the bytes came from (peer vs global store) with the configured
-    simulated transfer cost.
+    still per-boot — executors are per-request); the snapshot tier is a
+    :class:`~repro.core.blobstore.HostChunkTier` holding content-addressed
+    weight chunks, refcounted across the snapshots resident on this host —
+    two functions sharing base weights pay the shared bytes once, and a delta
+    restore fetches only the chunks this host is missing. Every fetch records
+    where the bytes came from (peer vs global store) and charges the simulated
+    transfer cost on the bytes that ACTUALLY moved.
     """
 
     def __init__(self, host_id: int, cfg: SchedulerConfig,
@@ -255,27 +282,34 @@ class HostArtifactCache:
         self.programs = LruTier(
             cfg.program_tier_bytes,
             on_evict=lambda key: directory.withdraw(PROGRAM_TIER, key, host_id))
-        self.snapshots = LruTier(
+        self.snapshots = HostChunkTier(
             cfg.snapshot_tier_bytes,
             on_evict=lambda key: directory.withdraw(SNAPSHOT_TIER, key, host_id))
         # set by the Scheduler once the cluster exists: (tier, key, requester)
         # -> (value, nbytes) read out of a live peer's tier, or None
         self.peer_lookup: Optional[Callable[[str, str, int],
                                             Optional[Tuple[Any, int]]]] = None
+        # (key, missing-cids, requester) -> {cid: bytes} gathered from live
+        # peers' chunk tiers (only the delta ships)
+        self.peer_chunks: Optional[Callable[[str, List[str], int],
+                                            Dict[str, bytes]]] = None
         self._lock = threading.Lock()
         self.peer_fetches = 0
         self.store_fetches = 0
         self.peer_serves = 0            # reads served TO other hosts
+        self.bytes_from_peer = 0
+        self.bytes_from_store = 0
 
-    def tier(self, name: str) -> LruTier:
+    def tier(self, name: str):
         return self.programs if name == PROGRAM_TIER else self.snapshots
 
     # ------------------------------------------------------------------- get
     def get(self, tier: str, key: str) -> Optional[Any]:
-        return self.tier(tier).get(key)
+        assert tier == PROGRAM_TIER, "snapshot tier is chunk-addressed"
+        return self.programs.get(key)
 
     def fetch_from_peer(self, tier: str, key: str) -> Optional[Any]:
-        """Try to pull a missing artifact out of a live peer's tier.
+        """Try to pull a missing program artifact out of a live peer's tier.
 
         On success the simulated peer-transfer cost is charged, the artifact is
         inserted locally (and published), and the value returned.
@@ -290,6 +324,7 @@ class HostArtifactCache:
             value = value.peer_copy()      # bytes travel; loaded memos don't
         with self._lock:
             self.peer_fetches += 1
+            self.bytes_from_peer += int(nbytes)
         self._simulate(nbytes, self.cfg.sim_peer_s_per_gb)
         self.insert(tier, key, value, nbytes)
         return value
@@ -300,13 +335,47 @@ class HostArtifactCache:
         the simulated store latency and insert the artifact locally."""
         with self._lock:
             self.store_fetches += 1
+            self.bytes_from_store += int(nbytes)
         self._simulate(nbytes, self.cfg.sim_store_s_per_gb)
         self.insert(tier, key, value, nbytes)
         return value
 
     def insert(self, tier: str, key: str, value: Any, nbytes: int) -> None:
-        if self.tier(tier).put(key, value, nbytes):
+        assert tier == PROGRAM_TIER, "snapshot chunks register via delta_restore"
+        if self.programs.put(key, value, nbytes):
             self.directory.publish(tier, key, self.host_id)
+
+    # ------------------------------------------------------------ chunk side
+    def fetch_chunks_from_peer(self, key: str,
+                               cids: List[str]) -> Dict[str, bytes]:
+        """Pull missing snapshot chunks from live peers' chunk tiers.
+
+        Only the delta ships: the peer returns the subset of ``cids`` it
+        holds, and the simulated peer cost is charged on the bytes received —
+        not on the snapshot size. Returns {} with no peers or no overlap.
+        """
+        if self.peer_chunks is None:
+            return {}
+        got = self.peer_chunks(key, cids, self.host_id)
+        if not got:
+            return {}
+        nbytes = sum(len(b) for b in got.values())
+        with self._lock:
+            self.peer_fetches += 1
+            self.bytes_from_peer += nbytes
+        self._simulate(nbytes, self.cfg.sim_peer_s_per_gb)
+        return got
+
+    def account_store_chunks(self, nbytes: int) -> None:
+        """Charge a global-store chunk fetch (delta bytes, already read)."""
+        with self._lock:
+            self.store_fetches += 1
+            self.bytes_from_store += int(nbytes)
+        self._simulate(nbytes, self.cfg.sim_store_s_per_gb)
+
+    def publish_snapshot(self, key: str) -> None:
+        """Advertise a snapshot (and thus its chunk range) as resident here."""
+        self.directory.publish(SNAPSHOT_TIER, key, self.host_id)
 
     @staticmethod
     def _simulate(nbytes: int, s_per_gb: float) -> None:
@@ -317,12 +386,16 @@ class HostArtifactCache:
         with self._lock:
             peer_fetches, store_fetches = self.peer_fetches, self.store_fetches
             peer_serves = self.peer_serves
+            bytes_from_peer = self.bytes_from_peer
+            bytes_from_store = self.bytes_from_store
         return {
             "program": self.programs.stats(),
             "snapshot": self.snapshots.stats(),
             "peer_fetches": peer_fetches,
             "store_fetches": store_fetches,
             "peer_serves": peer_serves,
+            "bytes_from_peer": bytes_from_peer,
+            "bytes_from_store": bytes_from_store,
         }
 
 
@@ -350,6 +423,7 @@ class Scheduler:
     def make_cache(self, host_id: int) -> HostArtifactCache:
         cache = HostArtifactCache(host_id, self.cfg, self.directory)
         cache.peer_lookup = self._peer_lookup
+        cache.peer_chunks = self._peer_chunk_lookup
         return cache
 
     # --------------------------------------------------------------- routing
@@ -406,25 +480,58 @@ class Scheduler:
     # ----------------------------------------------------------- peer lookup
     def _peer_lookup(self, tier: str, key: str,
                      requester_id: int) -> Optional[Tuple[Any, int]]:
+        if tier != PROGRAM_TIER:
+            return None                      # snapshots move chunk-wise below
         for hid in sorted(self.directory.owners(tier, key) - {requester_id}):
-            if not (0 <= hid < len(self.cluster.hosts)):
+            host = self._live_host(hid)
+            if host is None:
                 continue
-            host = self.cluster.hosts[hid]
-            cache = getattr(host, "cache", None)
-            if not host.alive or cache is None:
-                continue
-            entry = cache.tier(tier).peek(key)
+            entry = host.cache.programs.peek(key)
             if entry is not None:
-                with cache._lock:
-                    cache.peer_serves += 1
+                with host.cache._lock:
+                    host.cache.peer_serves += 1
                 return entry
         return None
+
+    def _peer_chunk_lookup(self, key: str, cids: List[str],
+                           requester_id: int) -> Dict[str, bytes]:
+        """Gather missing chunks from live peers — exact-snapshot owners
+        first (they hold the full chunk range by construction), then any
+        other snapshot-tier owner, which may hold shared chunks via a
+        different snapshot. Stops as soon as the delta is covered."""
+        wanted = list(dict.fromkeys(cids))
+        got: Dict[str, bytes] = {}
+        exact = self.directory.owners(SNAPSHOT_TIER, key)
+        others = self.directory.tier_owners(SNAPSHOT_TIER) - exact
+        for hid in sorted(exact - {requester_id}) + sorted(others - {requester_id}):
+            host = self._live_host(hid)
+            if host is None:
+                continue
+            served = host.cache.snapshots.chunks_for(
+                [c for c in wanted if c not in got])
+            if served:
+                with host.cache._lock:
+                    host.cache.peer_serves += 1
+                got.update(served)
+            if len(got) == len(wanted):
+                break
+        return got
+
+    def _live_host(self, hid: int):
+        if not (0 <= hid < len(self.cluster.hosts)):
+            return None
+        host = self.cluster.hosts[hid]
+        if not host.alive or getattr(host, "cache", None) is None:
+            return None
+        return host
 
     # --------------------------------------------------------------- reports
     def summary(self) -> Dict[str, Any]:
         hosts: Dict[int, Dict[str, Any]] = {}
         agg = {"program": [0, 0], "snapshot": [0, 0]}       # [hits, misses]
         peer_fetches = store_fetches = 0
+        bytes_from_peer = bytes_from_store = 0
+        bytes_deduped = 0
         for h in self.cluster.hosts:
             cache = getattr(h, "cache", None)
             if cache is None:
@@ -438,6 +545,9 @@ class Scheduler:
                 agg[tier][1] += int(s[tier]["misses"])
             peer_fetches += s["peer_fetches"]
             store_fetches += s["store_fetches"]
+            bytes_from_peer += s["bytes_from_peer"]
+            bytes_from_store += s["bytes_from_store"]
+            bytes_deduped += int(s["snapshot"].get("bytes_deduped", 0))
         with self._lock:
             routed, affinity_routed = self.routed, self.affinity_routed
         def rate(hits: int, misses: int) -> float:
@@ -448,6 +558,9 @@ class Scheduler:
             "snapshot_hit_rate": rate(*agg["snapshot"]),
             "peer_fetches": peer_fetches,
             "store_fetches": store_fetches,
+            "bytes_from_peer": bytes_from_peer,
+            "bytes_from_store": bytes_from_store,
+            "bytes_deduped": bytes_deduped,
             "routed": routed,
             "affinity_routed": affinity_routed,
             "replicas": self.cfg.replicas,

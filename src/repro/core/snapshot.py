@@ -3,15 +3,33 @@
 The paper's observation that interpreted functions (Python + scipy) pay ~80 ms extra
 at start maps here: a *generic* checkpoint needs parse + cast + reshard work in the
 start path, while a *snapshot* is written at deploy time in exactly the layout the
-executor consumes (one raw ``.npy`` per leaf, target dtype, target shard layout), so
-a start is ``mmap -> device_put`` and nothing else.
+executor consumes (target dtype, target shard layout), so a start moves bytes and
+nothing else.
 
-Layout:
-    <root>/<name>/index.json         tree structure + shapes/dtypes + fingerprints
+Two on-disk formats:
+
+v1 (standalone stores, e.g. repro.checkpoint):
+    <root>/<name>/index.json         tree structure + shapes/dtypes
     <root>/<name>/leaf_00000.npy ... one file per pytree leaf
+    ``load(mmap_mode='r')`` maps the files; bytes hit memory lazily during
+    device_put — the closest CPU analogue of DMA-ing straight into HBM.
 
-``load(mmap_mode='r')`` maps the files; bytes hit memory lazily during device_put —
-the closest CPU analogue of DMA-ing straight into HBM.
+v2 (chunked; active whenever a ``blobs`` ChunkStore is attached — the Gateway
+always attaches one):
+    <root>/<name>/index.json         tree structure + per-leaf CHUNK MANIFEST
+    <blobs>/<id[:2]>/<id>.chunk      content-addressed chunks, SHARED across
+                                     snapshots (refcounted in the ChunkStore)
+    ``save`` splits each leaf's raw bytes into fixed-size BLAKE2-addressed
+    chunks; equal content (two configs sharing base weights, an unchanged
+    leaf across versions) is stored once. A restore with a host chunk tier
+    becomes a DELTA restore (repro.core.blobstore.delta_restore): only the
+    chunks the host doesn't already hold move over the wire.
+
+Invariants: ``save`` publishes atomically (a reader never sees a partial
+snapshot); v2 chunk refcounts are balanced — one incref per unique chunk per
+save, one decref per evict/overwrite — so shared chunks outlive any single
+snapshot; the index always records the LOGICAL dtype (bf16/fp8), with storage
+in a same-width uint view where numpy's .npy/raw formats would degrade it.
 """
 from __future__ import annotations
 
@@ -20,7 +38,7 @@ import os
 import shutil
 import threading
 from pathlib import Path
-from typing import Any, Dict, List, Tuple
+from typing import Any, Callable, Dict, List, Tuple
 
 import jax
 import ml_dtypes
@@ -74,10 +92,20 @@ def _from_storable(arr: np.ndarray, logical_dtype: str) -> np.ndarray:
 
 
 class SnapshotStore:
-    def __init__(self, root: str | Path) -> None:
+    def __init__(self, root: str | Path, blobs=None) -> None:
+        """``blobs`` is a repro.core.blobstore.ChunkStore; when attached,
+        ``save`` writes the v2 chunked format (content-addressed, dedup'd,
+        delta-restorable) instead of per-leaf .npy files."""
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
+        self.blobs = blobs
         self._lock = threading.Lock()
+        # parsed index.json memo: the boot path probes is_chunked + reads the
+        # manifest on EVERY restore, which must not cost per-boot disk I/O +
+        # JSON parse once the snapshot is warm. Invalidated on save/evict
+        # (indexes are immutable between those, and callers never mutate the
+        # returned dict).
+        self._index_cache: Dict[str, Dict[str, Any]] = {}
 
     def _dir(self, name: str) -> Path:
         return self.root / name
@@ -85,9 +113,22 @@ class SnapshotStore:
     def has(self, name: str) -> bool:
         return (self._dir(name) / "index.json").exists()
 
+    def is_chunked(self, name: str) -> bool:
+        """True when this snapshot is stored in the v2 chunk-manifest format."""
+        return self.has(name) and self.read_index(name).get("format") == 2
+
     # ------------------------------------------------------------------- save
     def save(self, name: str, params) -> int:
-        """Write a snapshot atomically; returns total bytes."""
+        """Write a snapshot atomically; returns total stored bytes.
+
+        With a blob store attached this writes the v2 format: each leaf's raw
+        bytes split into fixed-size content-addressed chunks (stored once per
+        unique content across ALL snapshots), and an index.json that is pure
+        metadata — the chunk manifest a delta restore diffs against a host's
+        chunk tier.
+        """
+        if self.blobs is not None:
+            return self._save_v2(name, params)
         items, treedef = _flatten_with_paths(params)
         d = self._dir(name)
         tmp = d.with_name(d.name + ".tmp")
@@ -111,12 +152,97 @@ class SnapshotStore:
         (tmp / "index.json").write_text(json.dumps(index))
         shutil.rmtree(d, ignore_errors=True)
         os.replace(tmp, d)                                   # atomic publish
+        with self._lock:
+            self._index_cache[name] = index
+        return total
+
+    def _save_v2(self, name: str, params) -> int:
+        from repro.core.blobstore import split_chunks
+        items, treedef = _flatten_with_paths(params)
+        chunk_bytes = self.blobs.chunk_bytes
+        index: Dict[str, Any] = {"format": 2, "chunk_bytes": chunk_bytes,
+                                 "leaves": [], "treedef": None}
+        raws: List[Tuple[str, Any, str, str, bytes]] = []
+        for path, leaf in items:
+            arr = np.asarray(leaf)
+            stored, logical = _to_storable(arr)
+            raws.append((path, list(arr.shape), logical, str(stored.dtype),
+                         np.ascontiguousarray(stored).tobytes()))
+        # put_all writes chunks AND takes the snapshot reference atomically
+        # inside the ChunkStore's own lock — a concurrent evict can never
+        # delete a dedup-hit chunk between its put and its ref. Deliberately
+        # OUTSIDE this store's lock: read_index (on every boot's restore
+        # path) must not stall behind a multi-second snapshot write.
+        leaf_cid_lists = self.blobs.put_all(
+            [split_chunks(raw, chunk_bytes) for *_meta, raw in raws])
+        total = 0
+        for (path, shape, logical, stored_dtype, raw), leaf_cids \
+                in zip(raws, leaf_cid_lists):
+            total += len(raw)
+            index["leaves"].append({
+                "path": path, "chunks": leaf_cids, "nbytes": len(raw),
+                "shape": shape, "dtype": logical,
+                "stored_dtype": stored_dtype,
+            })
+        example = jax.tree.unflatten(treedef, list(range(len(items))))
+        index["treedef"] = _encode_structure(example)
+        with self._lock:
+            old_cids: List[str] = []
+            if self.has(name):                   # overwrite: release old chunks
+                old = self._read_index_locked(name)
+                if old.get("format") == 2:
+                    old_cids = [c for e in old["leaves"] for c in e["chunks"]]
+            d = self._dir(name)
+            tmp = d.with_name(d.name + ".tmp")
+            shutil.rmtree(tmp, ignore_errors=True)
+            tmp.mkdir(parents=True)
+            (tmp / "index.json").write_text(json.dumps(index))
+            shutil.rmtree(d, ignore_errors=True)
+            os.replace(tmp, d)                               # atomic publish
+            self._index_cache[name] = index
+            if old_cids:
+                self.blobs.decref(old_cids)
         return total
 
     # ------------------------------------------------------------------- load
     def read_index(self, name: str) -> Dict[str, Any]:
-        """Parse index.json (tree structure + per-leaf shape/dtype/file)."""
-        return json.loads((self._dir(name) / "index.json").read_text())
+        """Parse index.json (tree structure + per-leaf shape/dtype and either
+        a file name (v1) or a chunk manifest (v2)); memoized until the
+        snapshot is overwritten or evicted."""
+        with self._lock:
+            return self._read_index_locked(name)
+
+    def _read_index_locked(self, name: str) -> Dict[str, Any]:
+        index = self._index_cache.get(name)
+        if index is None:
+            index = json.loads((self._dir(name) / "index.json").read_text())
+            self._index_cache[name] = index
+        return index
+
+    @staticmethod
+    def index_nbytes(index: Dict[str, Any]) -> int:
+        """Logical stored bytes of a v2 index (sum of leaf byte lengths)."""
+        return sum(int(e["nbytes"]) for e in index["leaves"])
+
+    def chunk_ids(self, name: str) -> List[str]:
+        """Every chunk id of a v2 snapshot, in manifest order (with repeats)."""
+        return [c for e in self.read_index(name)["leaves"] for c in e["chunks"]]
+
+    @staticmethod
+    def _leaf_from_chunks(entry: Dict[str, Any],
+                          chunk_bytes: Callable[[str], bytes]) -> np.ndarray:
+        raw = b"".join(chunk_bytes(cid) for cid in entry["chunks"])
+        stored = np.frombuffer(raw, dtype=np.dtype(entry["stored_dtype"]))
+        return _from_storable(stored, entry["dtype"]).reshape(entry["shape"])
+
+    def assemble_tree(self, index: Dict[str, Any],
+                      chunk_bytes: Callable[[str], bytes]) -> Any:
+        """Rebuild the host tree of a v2 index from a chunk-byte source —
+        the delta restore's final step (``chunk_bytes`` may serve any mix of
+        tier-resident, peer-fetched, and store-fetched chunks)."""
+        leaves = [self._leaf_from_chunks(e, chunk_bytes)
+                  for e in index["leaves"]]
+        return _rebuild_structure(index["treedef"], leaves)
 
     def iter_host_leaves(self, name: str, mmap: bool = True):
         """Yield host leaves one at a time, in ordinal order.
@@ -124,16 +250,23 @@ class SnapshotStore:
         The chunked-load primitive: a streaming caller can consume leaf k
         while leaf k+1 is still being opened, instead of waiting for the whole
         tree (``load_host`` itself is this iterator, fully drained; with mmap
-        the bytes page in lazily during the eventual device transfer).
+        the v1 bytes page in lazily during the eventual device transfer —
+        v2 leaves are assembled from chunks, so ``mmap`` is a no-op there).
         """
         d = self._dir(name)
-        for e in self.read_index(name)["leaves"]:
+        index = self.read_index(name)
+        if index.get("format") == 2:
+            for e in index["leaves"]:
+                yield self._leaf_from_chunks(e, self.blobs.get)
+            return
+        for e in index["leaves"]:
             yield _from_storable(
                 np.load(d / e["file"], mmap_mode="r" if mmap else None),
                 e["dtype"])
 
     def load_host(self, name: str, mmap: bool = True) -> Any:
-        """Load as host numpy arrays (mmap'd by default). No device transfer."""
+        """Load as host numpy arrays (v1: mmap'd by default; v2: assembled
+        from the global chunk store). No device transfer."""
         index = self.read_index(name)
         leaves = list(self.iter_host_leaves(name, mmap=mmap))
         return _rebuild_structure(index["treedef"], leaves)
@@ -152,11 +285,24 @@ class SnapshotStore:
         return jax.tree.map(jax.device_put, host, shardings)
 
     def nbytes(self, name: str) -> int:
+        if self.has(name):
+            index = self.read_index(name)
+            if index.get("format") == 2:
+                return self.index_nbytes(index)
         d = self._dir(name)
         return sum(f.stat().st_size for f in d.glob("leaf_*.npy"))
 
     def evict(self, name: str) -> None:
-        shutil.rmtree(self._dir(name), ignore_errors=True)
+        """Remove a snapshot; v2 releases its chunk references (shared chunks
+        survive as long as any other snapshot still references them)."""
+        with self._lock:
+            if self.blobs is not None and self.has(name):
+                index = self._read_index_locked(name)
+                if index.get("format") == 2:
+                    self.blobs.decref(
+                        c for e in index["leaves"] for c in e["chunks"])
+            self._index_cache.pop(name, None)
+            shutil.rmtree(self._dir(name), ignore_errors=True)
 
     def names(self):
         return sorted(p.name for p in self.root.iterdir()

@@ -6,6 +6,11 @@ one parked thread per deadline — means 10k in-flight requests hold 10k
 threads doing nothing but waiting. ``DeadlineTimer`` keeps a single daemon
 thread over a heap of deadlines instead: schedule/cancel are O(log n) under
 one lock, and cancelled entries are simply skipped when they surface.
+
+Invariants: a cancelled entry never fires; an uncancelled entry fires exactly
+once, never before its deadline; callbacks run ON the timer thread, so they
+must hand real work elsewhere rather than block (a slow callback delays every
+later deadline).
 """
 from __future__ import annotations
 

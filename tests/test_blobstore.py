@@ -1,0 +1,348 @@
+"""ChunkStore / HostChunkTier / delta_restore: content addressing, refcount
+and eviction interplay (a chunk shared by two snapshots survives eviction of
+one), dedup byte accounting, and delta-proportional fetches."""
+import numpy as np
+import pytest
+
+from repro.core.blobstore import (
+    ChunkStore,
+    HostChunkTier,
+    chunk_id,
+    delta_restore,
+    manifest_chunk_sizes,
+    split_chunks,
+)
+from repro.core.scheduler import CacheDirectory, HostArtifactCache, SchedulerConfig
+from repro.core.snapshot import SnapshotStore
+
+
+# ------------------------------------------------------------------ chunking
+
+def test_split_chunks_fixed_size_with_remainder():
+    data = bytes(range(10))
+    chunks = split_chunks(data, 4)
+    assert [len(c) for c in chunks] == [4, 4, 2]
+    assert b"".join(chunks) == data
+    assert split_chunks(b"", 4) == []
+
+
+def test_chunk_id_is_content_addressed():
+    assert chunk_id(b"abc") == chunk_id(b"abc")
+    assert chunk_id(b"abc") != chunk_id(b"abd")
+
+
+# ----------------------------------------------------------------- ChunkStore
+
+def test_chunkstore_put_is_idempotent_and_counts_dedup(tmp_path):
+    store = ChunkStore(tmp_path, chunk_bytes=8)
+    cid = store.put(b"hello")
+    assert store.put(b"hello") == cid            # same content, same address
+    assert store.has(cid)
+    assert store.get(cid) == b"hello"
+    assert store.nbytes(cid) == 5
+    assert store.dedup_hits == 1
+    assert store.bytes_deduped == 5
+    assert store.bytes == 5                      # stored once
+
+
+def test_chunkstore_refcount_deletes_only_at_zero(tmp_path):
+    store = ChunkStore(tmp_path)
+    cid = store.put(b"shared")
+    store.incref([cid])                          # snapshot A
+    store.incref([cid])                          # snapshot B
+    assert store.refcount(cid) == 2
+    assert store.decref([cid]) == []             # A gone, B still references
+    assert store.has(cid)
+    assert store.decref([cid]) == [cid]          # last reference: file deleted
+    assert not store.has(cid)
+    assert store.bytes == 0
+
+
+def test_chunkstore_put_all_refs_once_per_unique_chunk(tmp_path):
+    """put_all takes ONE snapshot reference per unique cid, no matter how
+    many leaves repeat the content — symmetric with evict's unique decref."""
+    store = ChunkStore(tmp_path)
+    (cids_a, cids_b) = store.put_all([[b"dup", b"solo"], [b"dup"]])
+    assert cids_b[0] == cids_a[0]
+    assert store.refcount(cids_a[0]) == 1
+    assert store.refcount(cids_a[1]) == 1
+    store.decref(cids_a[0:1] + cids_a[1:2])
+    assert not store.has(cids_a[0]) and not store.has(cids_a[1])
+
+
+def test_pinned_chunk_survives_decref_until_unpin(tmp_path):
+    """The in-flight-restore guard: a decref that reaches zero while a reader
+    holds a pin defers the unlink; the file dies when the last pin drops."""
+    store = ChunkStore(tmp_path)
+    cid = store.put(b"pinned")
+    store.incref([cid])
+    store.pin([cid])
+    store.decref([cid])                          # last snapshot reference gone
+    assert store.has(cid)                        # ...but the reader still can read
+    assert store.get(cid) == b"pinned"
+    store.unpin([cid])
+    assert not store.has(cid)                    # deferred unlink happened
+    # pin/unpin on a chunk that never needed deferral is a no-op
+    cid2 = store.put(b"alive")
+    store.incref([cid2])
+    store.pin([cid2])
+    store.unpin([cid2])
+    assert store.has(cid2)
+
+
+def test_chunkstore_refs_survive_reload(tmp_path):
+    store = ChunkStore(tmp_path)
+    cid = store.put(b"persisted")
+    store.incref([cid])
+    again = ChunkStore(tmp_path)                 # fresh instance, same root
+    assert again.refcount(cid) == 1
+    assert again.nbytes(cid) == len(b"persisted")
+
+
+# -------------------------------------------------------------- HostChunkTier
+
+def _chunks(*blobs):
+    return {chunk_id(b): b for b in blobs}
+
+
+def test_tier_register_and_byte_accounting_dedups_shared_chunks():
+    tier = HostChunkTier(1000)
+    shared = _chunks(b"x" * 100)
+    only_a = _chunks(b"a" * 50)
+    only_b = _chunks(b"b" * 50)
+    assert tier.register("snapA", {**shared, **only_a}, 150)
+    assert tier.register("snapB", {**shared, **only_b}, 150)
+    # the shared chunk's 100 bytes count ONCE
+    assert tier.bytes == 200
+    assert tier.bytes_deduped == 100
+    assert tier.missing(list(shared) + list(only_a) + list(only_b)) == []
+
+
+def test_chunk_shared_by_two_snapshots_survives_eviction_of_one():
+    """The dedup invariant: evicting snapA must free only snapA's private
+    chunks; the chunk snapB still references stays resident."""
+    evicted = []
+    tier = HostChunkTier(1000, on_evict=evicted.append)
+    shared = _chunks(b"s" * 100)
+    only_a = _chunks(b"a" * 60)
+    tier.register("snapA", {**shared, **only_a}, 160)
+    tier.register("snapB", dict(shared), 100)
+    tier.drop("snapA")
+    assert evicted == ["snapA"]
+    assert not tier.contains("snapA")
+    assert tier.contains("snapB")
+    (shared_cid,) = shared
+    (a_cid,) = only_a
+    assert tier.has_chunk(shared_cid)            # survives: snapB references it
+    assert not tier.has_chunk(a_cid)             # private chunk freed
+    assert tier.bytes == 100
+
+
+def test_tier_lru_eviction_is_snapshot_granular_and_respects_sharing():
+    """Capacity pressure evicts the LRU *snapshot*; chunks it shares with a
+    surviving snapshot are not freed (and not double-counted on re-register)."""
+    evicted = []
+    tier = HostChunkTier(250, on_evict=evicted.append)
+    shared = _chunks(b"s" * 100)
+    tier.register("old", {**shared, **_chunks(b"o" * 50)}, 150)
+    tier.register("mid", {**shared, **_chunks(b"m" * 50)}, 150)   # bytes: 200
+    # 'new' needs 80 fresh bytes -> 280 > 250: evicts LRU 'old' (freeing only
+    # its private 50; the shared 100 stays via 'mid')
+    tier.register("new", _chunks(b"n" * 80), 80)
+    assert evicted == ["old"]
+    assert tier.contains("mid") and tier.contains("new")
+    (shared_cid,) = shared
+    assert tier.has_chunk(shared_cid)
+    assert tier.bytes == 100 + 50 + 80
+
+
+def test_tier_rejects_snapshot_larger_than_capacity():
+    tier = HostChunkTier(100)
+    tier.register("small", _chunks(b"k" * 40), 40)
+    assert not tier.register("huge", _chunks(b"h" * 101), 101)
+    assert tier.contains("small")                # nothing was evicted for it
+    assert not tier.contains("huge")
+    assert tier.bytes == 40
+
+
+def test_tier_rejects_oversize_snapshot_even_with_shared_chunks():
+    """Regression: an over-capacity snapshot must not slip in because part of
+    it is already resident via a sibling — admitting it would wedge the tier
+    above capacity forever (the LRU loop never evicts the newcomer)."""
+    tier = HostChunkTier(100)
+    shared = _chunks(b"s" * 80)
+    tier.register("resident", dict(shared), 80)
+    oversize = {**shared, **_chunks(b"x" * 60)}  # 140 unique > 100 capacity
+    assert not tier.register("oversize", oversize, 140)
+    assert tier.contains("resident")             # sibling untouched
+    assert not tier.contains("oversize")
+    assert tier.bytes == 80 <= tier.capacity_bytes
+
+
+def test_tier_tree_memo_counts_hits_and_refreshes_recency():
+    tier = HostChunkTier(1000)
+    tier.register("a", _chunks(b"a" * 10), 10, tree={"w": 1})
+    tier.register("b", _chunks(b"b" * 10), 10)
+    assert tier.tree("a") == {"w": 1}            # hit + a becomes MRU
+    assert tier.tree("missing") is None
+    assert tier.stats()["hits"] == 1
+    assert tier.stats()["misses"] == 1
+    # a was refreshed: capacity pressure now evicts b first
+    tier.register("c", _chunks(b"c" * 990), 990)
+    assert tier.contains("a") and not tier.contains("b")
+
+
+def test_tier_drop_tree_keeps_chunks():
+    tier = HostChunkTier(1000)
+    chunks = _chunks(b"z" * 10)
+    tier.register("a", chunks, 10, tree={"w": 1})
+    tier.drop_tree("a")
+    assert tier.tree("a") is None                # memo gone...
+    assert tier.missing(list(chunks)) == []      # ...chunks still resident
+
+
+def test_tier_peer_reads_leave_counters_alone():
+    tier = HostChunkTier(1000)
+    chunks = _chunks(b"p" * 10, b"q" * 10)
+    tier.register("a", chunks, 20)
+    got = tier.chunks_for(list(chunks) + ["nonexistent"])
+    assert set(got) == set(chunks)
+    st = tier.stats()
+    assert st["hits"] == 0 and st["misses"] == 0
+
+
+# ------------------------------------------------------------- delta restore
+
+def _tree(seed=0, n=4, leaf_bytes=256):
+    rng = np.random.default_rng(seed)
+    return {f"layer{i}": rng.standard_normal(leaf_bytes // 8)
+            for i in range(n)}
+
+
+def _perturb(tree, frac, seed=1):
+    """Mutate the first ``frac`` fraction of leaves; the rest stay identical
+    (and therefore chunk-identical)."""
+    rng = np.random.default_rng(seed)
+    keys = sorted(tree)
+    cut = int(len(keys) * frac)
+    out = dict(tree)
+    for k in keys[:cut]:
+        out[k] = tree[k] + rng.standard_normal(tree[k].shape)
+    return out
+
+
+def _host_cache(cfg=None):
+    cfg = cfg or SchedulerConfig()
+    directory = CacheDirectory()
+    return HostArtifactCache(0, cfg, directory)
+
+
+def test_delta_restore_cold_fetches_everything_then_nothing(tmp_path):
+    blobs = ChunkStore(tmp_path / "blobs", chunk_bytes=64)
+    store = SnapshotStore(tmp_path / "snaps", blobs=blobs)
+    tree = _tree()
+    store.save("m", tree)
+    cache = _host_cache()
+
+    got, stats = delta_restore(store, "m", cache)
+    np.testing.assert_allclose(np.asarray(got["layer0"]), tree["layer0"])
+    assert stats.source == "delta"
+    assert stats.bytes_fetched == stats.bytes_total > 0
+    assert stats.bytes_from_store == stats.bytes_fetched
+    assert stats.bytes_deduped == 0
+
+    got2, stats2 = delta_restore(store, "m", cache)     # warm tier: memo hit
+    assert stats2.source == "cached"
+    assert stats2.bytes_fetched == 0
+    assert got2 is got                                  # assembled tree reused
+
+
+def test_delta_restore_fetches_bytes_proportional_to_delta(tmp_path):
+    blobs = ChunkStore(tmp_path / "blobs", chunk_bytes=64)
+    store = SnapshotStore(tmp_path / "snaps", blobs=blobs)
+    base = _tree(n=8)
+    store.save("v1", base)
+    cache = _host_cache()
+    _, full = delta_restore(store, "v1", cache)         # tier now holds v1
+
+    for seed, frac in ((7, 0.25), (11, 0.5)):   # distinct seeds: variants must
+        store.save(f"v-{frac}", _perturb(base, frac, seed=seed))  # not share
+        # mutated chunks with each other, only the unmutated base
+        _, stats = delta_restore(store, f"v-{frac}", cache)
+        assert stats.source == "delta"
+        # only the mutated leaves' chunks move; the rest dedup from the tier
+        assert stats.bytes_fetched == pytest.approx(
+            full.bytes_total * frac, rel=0.15)
+        assert stats.bytes_deduped == pytest.approx(
+            full.bytes_total * (1 - frac), rel=0.15)
+
+
+def test_delta_restore_prefers_peer_chunks_and_ships_only_delta(tmp_path):
+    cfg = SchedulerConfig()
+    directory = CacheDirectory()
+    warm = HostArtifactCache(0, cfg, directory)
+    cold = HostArtifactCache(1, cfg, directory)
+    by_id = {0: warm, 1: cold}
+
+    def peer_chunks(key, cids, requester):
+        got = {}
+        for hid, cache in by_id.items():
+            if hid != requester:
+                got.update(cache.snapshots.chunks_for(cids))
+        return got
+
+    warm.peer_chunks = cold.peer_chunks = peer_chunks
+
+    blobs = ChunkStore(tmp_path / "blobs", chunk_bytes=64)
+    store = SnapshotStore(tmp_path / "snaps", blobs=blobs)
+    base = _tree(n=8)
+    store.save("v1", base)
+    store.save("v2", _perturb(base, 0.5))
+    _, full = delta_restore(store, "v1", warm)          # host 0 holds v1
+
+    _, stats = delta_restore(store, "v2", cold)         # host 1 holds nothing
+    assert stats.source == "delta"
+    # the shared half ships from the peer; only the mutated half hits the store
+    assert stats.bytes_from_peer == pytest.approx(full.bytes_total * 0.5, rel=0.15)
+    assert stats.bytes_from_store == pytest.approx(full.bytes_total * 0.5, rel=0.15)
+    assert cold.peer_fetches == 1
+    assert cold.bytes_from_peer == stats.bytes_from_peer
+
+
+def test_delta_restore_oversize_snapshot_skips_tier_but_restores(tmp_path):
+    blobs = ChunkStore(tmp_path / "blobs", chunk_bytes=64)
+    store = SnapshotStore(tmp_path / "snaps", blobs=blobs)
+    tree = _tree()
+    store.save("m", tree)
+    cache = _host_cache(SchedulerConfig(snapshot_tier_bytes=16))  # too small
+    got, stats = delta_restore(store, "m", cache)
+    np.testing.assert_allclose(np.asarray(got["layer1"]), tree["layer1"])
+    assert not cache.snapshots.contains("m")            # rejected, not wedged
+    _, again = delta_restore(store, "m", cache)         # still restorable
+    assert again.bytes_fetched == again.bytes_total
+
+
+def test_manifest_chunk_sizes_last_chunk_is_remainder(tmp_path):
+    blobs = ChunkStore(tmp_path / "blobs", chunk_bytes=100)
+    store = SnapshotStore(tmp_path / "snaps", blobs=blobs)
+    store.save("m", {"w": np.zeros(33, np.uint8), "v": np.arange(130, dtype=np.uint8)})
+    index = store.read_index("m")
+    sizes = manifest_chunk_sizes(index)
+    # 33-byte leaf -> one 33-byte chunk; 130-byte leaf -> 100 + 30
+    assert sorted(sizes.values()) == [30, 33, 100]
+
+
+def test_snapshot_store_evict_releases_chunk_refs(tmp_path):
+    blobs = ChunkStore(tmp_path / "blobs", chunk_bytes=64)
+    store = SnapshotStore(tmp_path / "snaps", blobs=blobs)
+    tree = _tree()
+    store.save("a", tree)
+    store.save("b", tree)                               # identical content
+    cids = set(store.chunk_ids("a"))
+    assert all(blobs.refcount(c) == 2 for c in cids)
+    store.evict("a")
+    assert all(blobs.refcount(c) == 1 for c in cids)
+    assert all(blobs.has(c) for c in cids)              # b still needs them
+    store.evict("b")
+    assert all(not blobs.has(c) for c in cids)
+    assert blobs.bytes == 0

@@ -94,6 +94,34 @@ def test_stage_failure_raises_and_disposes():
         ENGINE.execute(plan, _fake_dep(), Timeline(), driver_name="t")
 
 
+def test_sub_stage_splits_attributed_to_their_own_stage():
+    """A stage's ``extra_s`` splits are carved out of THAT stage's time and
+    never consumed by a concurrently-finishing stage on the other track: the
+    program stage here finishes while the weights stage (which produced the
+    split) is still asleep, and must record its full duration."""
+    class _SplitStage(Stage):
+        name, track = "restore_weights_host", TRACK_WEIGHTS
+
+        def run(self, ctx):
+            self.extra_s = {"fetch_chunks_store": 0.04}     # produced early...
+            ctx.params = {}
+            time.sleep(0.08)                                # ...stage still runs
+
+    plan = BootPlan([
+        _SleepStage("deserialize_program", TRACK_PROGRAM, 0.02,
+                    sets=[("program", lambda p, t: t)]),
+        _SplitStage(), Finalize(),
+    ])
+    tl = Timeline()
+    ex = ENGINE.execute(plan, _fake_dep(), tl, driver_name="t")
+    assert tl.stage_s["fetch_chunks_store"] == pytest.approx(0.04)
+    # split carved out of the weights stage, which slept ~0.08 total
+    assert tl.stage_s["restore_weights_host"] == pytest.approx(0.04, abs=0.02)
+    # the program stage finished first and kept its OWN full duration
+    assert tl.stage_s["deserialize_program"] >= 0.02
+    ex.exit()
+
+
 # --------------------------------------------------- speculative pre-boot
 
 
@@ -172,7 +200,7 @@ def test_per_stage_timings_populated_for_every_driver(gateway, driver):
     # peer, or global store — repro.core.scheduler), so any one variant counts
     fetch_variants = {"fetch_program", "fetch_program_cached", "fetch_peer"}
     restore_variants = {"restore_weights_host", "restore_weights_cached",
-                        "restore_weights_peer"}
+                        "restore_weights_peer", "restore_delta"}
     expected = {
         "process": [{"reuse_donor"}],
         "fork": [{"alias_donor", "finalize"}],
@@ -217,7 +245,7 @@ def test_warm_cold_miss_records_fallback_stage_timings(gateway):
     # (the weight restore may have been served from the host tier)
     assert {"deserialize_program", "device_put"} <= set(tl.stage_s), tl.stage_s
     assert {"restore_weights_host", "restore_weights_cached",
-            "restore_weights_peer"} & set(tl.stage_s), tl.stage_s
+            "restore_weights_peer", "restore_delta"} & set(tl.stage_s), tl.stage_s
     for host in gw.cluster.hosts:                         # pools are per-host:
         host.drivers["warm"].prewarm(dep, 1)              # guarantee a hit
     gw.invoke(spec.name, driver="warm", label="warmhit")

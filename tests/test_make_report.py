@@ -1,0 +1,60 @@
+"""make_report._replace: idempotent marker substitution that never silently
+drops table output (regression: a missing marker used to be a no-op, and
+regex-active content like backslashes corrupted the substitution)."""
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT))
+
+from benchmarks.make_report import _replace  # noqa: E402
+
+
+def test_replace_fills_open_marker():
+    md = "# Doc\n\n<!-- T -->\n"
+    out = _replace(md, "T", "| a | b |")
+    assert "<!-- T -->\n| a | b |\n<!-- /T -->" in out
+
+
+def test_replace_is_idempotent():
+    md = "# Doc\n\n<!-- T -->\n"
+    once = _replace(md, "T", "| v1 |")
+    twice = _replace(once, "T", "| v1 |")
+    assert once == twice
+    # and re-running with NEW content replaces, never nests or duplicates
+    updated = _replace(once, "T", "| v2 |")
+    assert "| v2 |" in updated and "| v1 |" not in updated
+    assert updated.count("<!-- T -->") == 1
+    assert updated.count("<!-- /T -->") == 1
+
+
+def test_replace_missing_marker_appends_section_instead_of_dropping():
+    """Regression: with no marker present the old code returned the input
+    unchanged — the rendered table silently vanished."""
+    md = "# Doc\n\nsome prose\n"
+    out = _replace(md, "NEW_TABLE", "| x |", title="New table")
+    assert "| x |" in out
+    assert "## New table" in out
+    assert out.startswith(md.rstrip())          # existing content untouched
+    # and the appended section is itself idempotently replaceable now
+    again = _replace(out, "NEW_TABLE", "| y |", title="New table")
+    assert "| y |" in again and "| x |" not in again
+    assert again.count("## New table") == 1
+
+
+def test_replace_content_with_regex_escapes_survives():
+    r"""Regression: re.sub with a string replacement interprets ``\g``/``\1``;
+    table content containing backslashes (paths, regexes) must land verbatim."""
+    md = "<!-- T -->\nold\n<!-- /T -->"
+    tricky = r"C:\group \g<0> \1 \\ end"
+    out = _replace(md, "T", tricky)
+    assert tricky in out
+    # idempotent on tricky content too
+    assert _replace(out, "T", tricky) == out
+
+
+def test_replace_only_touches_its_own_tag():
+    md = ("<!-- A -->\na-old\n<!-- /A -->\n\n"
+          "<!-- B -->\nb-old\n<!-- /B -->\n")
+    out = _replace(md, "A", "a-new")
+    assert "a-new" in out and "b-old" in out and "a-old" not in out

@@ -352,20 +352,32 @@ def test_cold_miss_fetches_from_store_then_hits_host_tier(sched_gateway):
     gw.invoke(spec.name, driver="unikernel", label="sched:seq")
     first = gw.recorder.timelines("sched:seq")[0]
     # very first boot anywhere: global store, and the store path must be the
-    # one stamped in the Timeline
+    # one stamped in the Timeline — for weights that is a delta restore whose
+    # delta is the WHOLE snapshot (nothing resident yet, all chunks move)
     assert "fetch_program" in first.stage_s, first.stage_s
     assert "fetch_program_cached" not in first.stage_s
-    assert "restore_weights_host" in first.stage_s
+    assert "restore_delta" in first.stage_s
+    assert "fetch_chunks_store" in first.stage_s
+    assert first.bytes_fetched > 0
+    # nothing was resident, so essentially everything moved — any dedup on a
+    # cold boot is intra-snapshot repeated chunks (identical zero-init
+    # leaves), which only ever move once
+    assert first.bytes_deduped < 0.01 * first.bytes_fetched
     for _ in range(4):
         gw.invoke(spec.name, driver="unikernel", label="sched:seq")
     tls = gw.recorder.timelines("sched:seq")
-    # affinity routing sends repeats to the warmed host: cached stages appear
+    # affinity routing sends repeats to the warmed host: cached stages appear,
+    # and the warm chunk tier means NOTHING moves for those boots
     assert any("fetch_program_cached" in tl.stage_s for tl in tls[1:]), \
         [sorted(tl.stage_s) for tl in tls]
-    assert any("restore_weights_cached" in tl.stage_s for tl in tls[1:])
+    cached = [tl for tl in tls[1:] if "restore_weights_cached" in tl.stage_s]
+    assert cached
+    assert all(tl.bytes_fetched == 0 for tl in cached)
+    assert all(tl.bytes_deduped > 0 for tl in cached)
     summary = gw.placement_summary()
     assert summary["program_hit_rate"] > 0.0
     assert summary["store_fetches"] >= 1
+    assert summary["bytes_from_store"] >= first.bytes_fetched
 
 
 def test_peer_fetch_beats_store_on_second_host(sched_gateway):

@@ -100,6 +100,47 @@ def test_nbytes_counts_leaf_files(tmp_path):
     assert store.nbytes("m") == total > 16 * 16 * 4
 
 
+# ------------------------------------------------------- v2 (chunked) format
+
+@pytest.mark.parametrize("dtype", ["bfloat16", "float8_e5m2", "float32"])
+def test_v2_chunked_roundtrip_preserves_dtypes(tmp_path, dtype):
+    """With a blob store attached, save writes chunk manifests (no leaf files)
+    and load reassembles bit-identical leaves — including the uint-view path
+    for ml_dtypes that numpy's raw formats would degrade."""
+    from repro.core.blobstore import ChunkStore
+    store = SnapshotStore(tmp_path / "snaps",
+                          blobs=ChunkStore(tmp_path / "blobs", chunk_bytes=128))
+    dt = np.dtype(getattr(ml_dtypes, dtype, None) or dtype)
+    tree = {"w": np.arange(-64, 64, dtype=np.float32).reshape(8, 16).astype(dt),
+            "b": np.asarray([0.5, -0.25], dtype=dt),
+            "meta": (np.int32(9), None)}
+    store.save("m", tree)
+    assert store.is_chunked("m")
+    assert not list((tmp_path / "snaps" / "m").glob("leaf_*.npy"))
+    back = store.load_host("m")
+    assert back["w"].dtype == dt
+    np.testing.assert_array_equal(
+        np.asarray(back["w"], np.float32), np.asarray(tree["w"], np.float32))
+    assert int(back["meta"][0]) == 9 and back["meta"][1] is None
+    index = json.loads((tmp_path / "snaps" / "m" / "index.json").read_text())
+    assert index["format"] == 2
+    # the index records the LOGICAL dtype for the w/b leaves (meta is int32)
+    assert [e["dtype"] for e in index["leaves"]
+            if "'w'" in e["path"] or "'b'" in e["path"]] == [dtype, dtype]
+
+
+def test_v2_overwrite_releases_old_chunks(tmp_path):
+    from repro.core.blobstore import ChunkStore
+    blobs = ChunkStore(tmp_path / "blobs", chunk_bytes=64)
+    store = SnapshotStore(tmp_path / "snaps", blobs=blobs)
+    store.save("m", {"w": np.zeros(64, np.float32)})
+    old = set(store.chunk_ids("m"))
+    store.save("m", {"w": np.ones(128, np.float32)})    # different shape too
+    assert all(not blobs.has(c) for c in old)           # old content released
+    np.testing.assert_array_equal(np.asarray(store.load_host("m")["w"]),
+                                  np.ones(128, np.float32))
+
+
 # ---------------------------------------------- generic checkpoint equivalence
 
 def test_generic_checkpoint_matches_snapshot(tmp_path):

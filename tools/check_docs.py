@@ -1,0 +1,78 @@
+#!/usr/bin/env python
+"""Docs hygiene guard (run by the CI `docs` job and tier-1 tests/test_docs.py).
+
+Two checks, both cheap and dependency-free:
+
+1. **Relative-link check** — every markdown link in README.md and docs/*.md
+   that points at a repo path must resolve to an existing file or directory
+   (external http(s)/mailto links and pure #anchors are skipped; a #fragment
+   on a file link is checked against the file only).
+2. **Module docstring guard** — every module under src/repro/core must carry
+   a non-empty module docstring: the platform's modules document their own
+   invariants (see docs/ARCHITECTURE.md), and a new module without one is a
+   regression in the contributor-facing cold start this tree exists to fix.
+"""
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+from typing import List
+
+ROOT = Path(__file__).resolve().parent.parent
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def markdown_files() -> List[Path]:
+    files = [ROOT / "README.md"]
+    files += sorted((ROOT / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check_links() -> List[str]:
+    errors = []
+    for md in markdown_files():
+        for target in _LINK.findall(md.read_text()):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(
+                    f"{md.relative_to(ROOT)}: broken relative link -> {target}")
+    return errors
+
+
+def check_core_docstrings() -> List[str]:
+    errors = []
+    core = ROOT / "src" / "repro" / "core"
+    for py in sorted(core.glob("*.py")):
+        tree = ast.parse(py.read_text())
+        doc = ast.get_docstring(tree)
+        if not doc or not doc.strip():
+            errors.append(
+                f"src/repro/core/{py.name}: missing module docstring "
+                "(state what the module is and its invariants)")
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + check_core_docstrings()
+    for e in errors:
+        print(f"check_docs: {e}")
+    if errors:
+        print(f"check_docs: FAIL ({len(errors)} problem(s))")
+        return 1
+    n_md = len(markdown_files())
+    n_py = len(list((ROOT / "src" / "repro" / "core").glob("*.py")))
+    print(f"check_docs: OK ({n_md} markdown files link-checked, "
+          f"{n_py} core modules have docstrings)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
