@@ -1,0 +1,623 @@
+"""Scale/chaos harness: 10^5-10^6 requests over 64-256 hosts in virtual time.
+
+The "practical limits" study ("How Low Can You Go?", arxiv 2109.13319) applied
+to this stack: the REAL dispatcher (routing, retry, strict hedging, speculative
+pre-boot claims), the REAL scheduler (HRW replica sets, per-host program tiers,
+peer-vs-store fetch accounting), and the REAL deadline timer run unmodified —
+only the hosts and the executor work are simulated. Every wait rides a
+:class:`repro.core.simclock.VirtualClock`, so a million-request run with
+hundreds of hosts finishes in wall-clock minutes while latency distributions,
+hedge deadlines, and failure orderings stay faithful to the event timeline.
+
+Chaos is injected mid-run from a declarative schedule (see
+docs/BENCHMARKS.md): hosts killed / added / revived / removed, the global
+store and peer links slowed by a factor over a window, and executor crashes
+(surfacing as ``XlaRuntimeError``, which the dispatcher classifies transient)
+over a window. The run reports p50/p95/p99/p99.9 against an SLO and persists
+headline numbers as ``BENCH_6_scale.json`` at the repo root so the perf
+trajectory is diffable across PRs.
+
+Invariants the harness enforces (exit code 1 on violation): every submitted
+request settles exactly once — no lost Futures, no residual host load, no
+pending timer entries at the end; failures beyond the retry budget count
+against the SLO gate.
+
+CLI:
+    python benchmarks/bench_scale.py                  # 1e5 req / 64 hosts
+    python benchmarks/bench_scale.py --smoke          # 1e4 req / 16 hosts (CI)
+    python benchmarks/bench_scale.py --requests 1000000 --hosts 256
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import random
+import sys
+import time
+from collections import deque
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT))
+sys.path.insert(0, str(ROOT / "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core.cluster import Cluster, HostFailure  # noqa: E402
+from repro.core.dispatcher import Dispatcher  # noqa: E402
+from repro.core.scheduler import PROGRAM_TIER, SchedulerConfig  # noqa: E402
+from repro.core.simclock import VirtualClock  # noqa: E402
+
+
+class XlaRuntimeError(RuntimeError):
+    """Name-matched stand-in for jaxlib's XlaRuntimeError: an executor crash.
+    The dispatcher classifies transient faults by type NAME, so simulated
+    crashes ride the exact retry path real device losses do."""
+
+
+# --------------------------------------------------------------------- model
+
+@dataclass
+class ServiceModel:
+    """Virtual-time costs for one simulated request (milliseconds)."""
+
+    exec_ms: float = 25.0            # median function execution
+    exec_sigma: float = 0.35         # lognormal spread of execution time
+    straggler_p: float = 0.01        # fraction of runs that straggle ...
+    straggler_x: float = 6.0         # ... by this factor (hedge fodder)
+    boot_cached_ms: float = 6.0      # program bytes already in the host tier
+    boot_cold_ms: float = 170.0      # full boot when the bytes must move
+    peer_fetch_ms: float = 22.0      # tier miss served by a live peer
+    store_fetch_ms: float = 85.0     # tier miss served by the global store
+    program_nbytes: int = 48 << 20   # per-function program payload
+
+
+class _Image:
+    __slots__ = ("key",)
+
+    def __init__(self, key: str) -> None:
+        self.key = key
+
+
+class SimDeployment:
+    """The two attributes the dispatcher needs from a Deployment: a name for
+    the latency-model key and an image key for affinity routing."""
+
+    __slots__ = ("name", "image")
+
+    def __init__(self, name: str) -> None:
+        self.name = name
+        self.image = _Image(f"img-{name}")
+
+
+class SimBootHandle:
+    """Claimable/cancellable stand-in for boot.BootHandle: records when the
+    speculative boot launched so a claim can credit the overlap."""
+
+    __slots__ = ("t_launch", "cancelled")
+
+    def __init__(self, t_launch: float) -> None:
+        self.t_launch = t_launch
+        self.cancelled = False
+
+    def cancel(self) -> None:
+        self.cancelled = True
+
+
+class _Job:
+    __slots__ = ("work", "future", "event", "settled")
+
+    def __init__(self, work: Callable[[], Any]) -> None:
+        self.work = work
+        self.future: Future = Future()
+        self.event = None
+        self.settled = False
+
+
+class SimHost:
+    """One simulated machine: a bounded slot pool over the virtual clock.
+
+    Mirrors the :class:`repro.core.cluster.Host` surface the dispatcher and
+    scheduler touch (``host_id``/``alive``/``load``/``cache``/``submit``/
+    ``check_alive``/``kill``/``revive``/``shutdown``) — but work completes via
+    a scheduled clock event instead of a thread pool, and ``kill()`` fails
+    every queued and running job with HostFailure at the kill instant, which
+    is exactly the churn the dispatcher's retry path must absorb.
+
+    The service-time handoff: the agent runs synchronously at slot
+    acquisition, calls :meth:`charge` with the request's virtual duration,
+    and the host completes the Future that much later on the clock.
+    """
+
+    def __init__(self, host_id: int, n_slots: int, clock: VirtualClock,
+                 cache=None) -> None:
+        self.host_id = host_id
+        self.n_slots = n_slots
+        self.clock = clock
+        self.cache = cache
+        self.alive = True
+        self.drivers: Dict[str, Any] = {}
+        self._queue: deque = deque()
+        self._running: List[_Job] = []
+        self._inflight = 0
+        self._charge = 0.0
+
+    # ------------------------------------------------------------ host API
+    def submit(self, fn: Callable, *args) -> Future:
+        if not self.alive:
+            raise HostFailure(f"host {self.host_id} is dead")
+        job = _Job(lambda: fn(*args))
+        self._inflight += 1
+        self._queue.append(job)
+        self._pump()
+        return job.future
+
+    @property
+    def load(self) -> int:
+        return self._inflight
+
+    def check_alive(self) -> None:
+        if not self.alive:
+            raise HostFailure(f"host {self.host_id} died")
+
+    def kill(self) -> None:
+        self.alive = False
+        victims = list(self._running) + list(self._queue)
+        self._running.clear()
+        self._queue.clear()
+        for job in victims:
+            if job.event is not None:
+                job.event.cancel()
+            self._settle(job, error=HostFailure(
+                f"host {self.host_id} died mid-request"))
+
+    def revive(self) -> None:
+        self.alive = True
+
+    def shutdown(self) -> None:
+        self.kill()
+        self.alive = False
+
+    # ---------------------------------------------------------- simulation
+    def charge(self, seconds: float) -> None:
+        """Called by the agent DURING the work callable: how much virtual
+        time this request occupies its slot."""
+        self._charge += max(0.0, seconds)
+
+    def _pump(self) -> None:
+        while self.alive and self._queue and len(self._running) < self.n_slots:
+            job = self._queue.popleft()
+            self._running.append(job)
+            self._charge = 0.0
+            try:
+                value = job.work()
+                err = None
+            except BaseException as e:      # agent crash / liveness fault
+                value, err = None, e
+            duration = self._charge
+            job.event = self.clock.schedule(
+                duration, lambda j=job, v=value, e=err: self._complete(j, v, e))
+
+    def _complete(self, job: _Job, value, err) -> None:
+        if job.settled:                     # lost a race with kill()
+            return
+        if job in self._running:
+            self._running.remove(job)
+        self._settle(job, value=value, error=err)
+        self._pump()
+
+    def _settle(self, job: _Job, value=None, error=None) -> None:
+        if job.settled:
+            return
+        job.settled = True
+        self._inflight -= 1
+        if error is not None:
+            job.future.set_exception(error)
+        else:
+            job.future.set_result(value)
+
+
+class SimCluster(Cluster):
+    """A Cluster whose hosts are :class:`SimHost`\\ s sharing one virtual
+    clock — the scheduler, caches, and churn API are the real thing."""
+
+    def __init__(self, clock: VirtualClock, n_hosts: int,
+                 slots_per_host: int = 4,
+                 scheduler: Optional[SchedulerConfig] = None) -> None:
+        self._clock = clock
+        super().__init__(n_hosts=n_hosts, slots_per_host=slots_per_host,
+                         scheduler=scheduler)
+
+    def _make_host(self, host_id: int, n_slots: int) -> SimHost:
+        return SimHost(host_id, n_slots, self._clock,
+                       cache=self.scheduler.make_cache(host_id))
+
+
+_PAYLOAD = object()        # placeholder program bytes: only nbytes matters
+
+
+class SimAgent:
+    """Agent stand-in: consults the REAL per-host program tier (hit / peer /
+    store, with directory publication) to price the boot, then charges the
+    host the virtual service time. Supports the dispatcher's speculative
+    pre-boot protocol; injects crashes and slowdowns under chaos control."""
+
+    def __init__(self, clock: VirtualClock, model: ServiceModel,
+                 rng: random.Random) -> None:
+        self.clock = clock
+        self.model = model
+        self.rng = rng
+        self.boots = 0
+        self.crashes_injected = 0
+        # chaos dials (set/reset by scheduled chaos events)
+        self.crash_p = 0.0
+        self.store_slow = 1.0
+        self.peer_slow = 1.0
+
+    def preboot(self, host, dep, driver_name: str,
+                bucket_rows: Optional[int] = None) -> SimBootHandle:
+        return SimBootHandle(self.clock.now())
+
+    def _boot_seconds(self, host) -> float:
+        """Price the boot off the host's REAL program tier state."""
+        m = self.model
+        cache = host.cache
+        if cache is None:
+            return m.boot_cold_ms / 1e3
+        key = self._pkey
+        if cache.programs.get(key) is not None:
+            return m.boot_cached_ms / 1e3
+        art = cache.fetch_from_peer(PROGRAM_TIER, key)
+        if art is not None:
+            return (m.boot_cached_ms + m.peer_fetch_ms * self.peer_slow) / 1e3
+        cache.fetch_from_store(PROGRAM_TIER, key, _PAYLOAD, m.program_nbytes)
+        return (m.boot_cold_ms + m.store_fetch_ms * self.store_slow) / 1e3
+
+    def handle(self, host, dep, tokens, driver_name: str, tl,
+               label: Optional[str] = None, preboot=None):
+        t0 = self.clock.now()
+        tl.t_dispatch = t0
+        host.check_alive()
+        self.boots += 1
+        self._pkey = dep.image.key
+        boot_s = self._boot_seconds(host)
+        if preboot is not None and not preboot.cancelled:
+            # the speculative boot ran while this request sat in the host
+            # queue: credit the elapsed overlap against the boot
+            boot_s = max(0.0, boot_s - (t0 - preboot.t_launch))
+        if self.rng.random() < self.crash_p:
+            # executor crash partway through the boot: charge what elapsed,
+            # surface the transient fault for the dispatcher to retry
+            self.crashes_injected += 1
+            host.charge(boot_s * self.rng.random())
+            raise XlaRuntimeError("simulated executor crash (device lost)")
+        m = self.model
+        exec_s = self.rng.lognormvariate(
+            math.log(m.exec_ms / 1e3), m.exec_sigma)
+        if self.rng.random() < m.straggler_p:
+            exec_s *= m.straggler_x
+        tl.t_start_begin = t0
+        tl.t_exec_begin = t0 + boot_s
+        tl.t_done = t0 + boot_s + exec_s
+        host.charge(boot_s + exec_s)
+        return 0
+
+
+# --------------------------------------------------------------------- chaos
+
+def default_chaos(duration_s: float, n_kills: int = 2, n_adds: int = 2,
+                  n_revives: int = 1) -> List[dict]:
+    """The standard mid-run schedule: kills and adds interleaved through the
+    middle of the run, one revive, a store slowdown window, a crash window."""
+    ops: List[dict] = []
+    for i in range(n_kills):
+        ops.append({"t": duration_s * (0.25 + 0.30 * i / max(n_kills - 1, 1)),
+                    "op": "kill"})
+    for i in range(n_adds):
+        ops.append({"t": duration_s * (0.35 + 0.30 * i / max(n_adds - 1, 1)),
+                    "op": "add"})
+    for i in range(n_revives):
+        ops.append({"t": duration_s * 0.80, "op": "revive"})
+    ops.append({"t": duration_s * 0.40, "op": "store_slow",
+                "factor": 4.0, "duration": duration_s * 0.15})
+    ops.append({"t": duration_s * 0.55, "op": "crash_window",
+                "p": 0.02, "duration": duration_s * 0.10})
+    return sorted(ops, key=lambda o: o["t"])
+
+
+# -------------------------------------------------------------------- runner
+
+@dataclass
+class ScaleConfig:
+    n_requests: int = 100_000
+    n_hosts: int = 64
+    slots_per_host: int = 4
+    rate_rps: float = 2000.0
+    n_functions: int = 32
+    zipf_a: float = 1.1              # function popularity skew
+    seed: int = 0
+    slo_ms: float = 400.0            # p99 e2e bar
+    hedge_factor: float = 3.0
+    max_retries: int = 4
+    speculative: bool = True
+    chaos: Optional[List[dict]] = None     # None -> default_chaos(duration)
+    model: ServiceModel = field(default_factory=ServiceModel)
+    scheduler: Optional[SchedulerConfig] = None
+
+    @property
+    def duration_s(self) -> float:
+        return self.n_requests / self.rate_rps
+
+
+class ScaleRunner:
+    """Wires the sim pieces to the real dispatcher and drives one run."""
+
+    def __init__(self, cfg: ScaleConfig) -> None:
+        self.cfg = cfg
+        self.clock = VirtualClock()
+        self.rng = random.Random(cfg.seed)
+        self.cluster = SimCluster(self.clock, cfg.n_hosts, cfg.slots_per_host,
+                                  scheduler=cfg.scheduler)
+        self.agent = SimAgent(self.clock, cfg.model, self.rng)
+        self.dispatcher = Dispatcher(
+            self.cluster, self.agent, max_retries=cfg.max_retries,
+            hedge_factor=cfg.hedge_factor, hedging=True,
+            speculative=cfg.speculative, clock=self.clock)
+        self.functions = [SimDeployment(f"fn{i:03d}")
+                          for i in range(cfg.n_functions)]
+        weights = [1.0 / (i + 1) ** cfg.zipf_a
+                   for i in range(cfg.n_functions)]
+        total = sum(weights)
+        self._cum = list(np.cumsum([w / total for w in weights]))
+        # accounting
+        self.submitted = 0
+        self.settled = 0
+        self.ok = 0
+        self.failed = 0
+        self.latencies: List[float] = []
+        self.failures: List[str] = []
+        self.kills = 0
+        self.adds = 0
+        self.revives = 0
+        self.removes = 0
+
+    # ------------------------------------------------------------ workload
+    def _pick_fn(self) -> SimDeployment:
+        r = self.rng.random()
+        for i, c in enumerate(self._cum):
+            if r <= c:
+                return self.functions[i]
+        return self.functions[-1]
+
+    def _submit_one(self) -> None:
+        dep = self._pick_fn()
+        t0 = self.clock.now()
+        fut = self.dispatcher.submit(dep, None, "sim", label=dep.name)
+        self.submitted += 1
+
+        def on_settle(f: Future, t0=t0) -> None:
+            self.settled += 1
+            err = f.exception()
+            if err is None:
+                self.ok += 1
+                self.latencies.append(self.clock.now() - t0)
+            else:
+                self.failed += 1
+                self.failures.append(f"{type(err).__name__}: {err}")
+
+        fut.add_done_callback(on_settle)
+
+    def _arrivals(self) -> None:
+        remaining = [self.cfg.n_requests]
+
+        def next_arrival() -> None:
+            if remaining[0] <= 0:
+                return
+            remaining[0] -= 1
+            self._submit_one()
+            if remaining[0] > 0:
+                self.clock.schedule(
+                    self.rng.expovariate(self.cfg.rate_rps), next_arrival)
+
+        self.clock.schedule(0.0, next_arrival)
+
+    # --------------------------------------------------------------- chaos
+    def _apply_chaos(self, schedule: List[dict]) -> None:
+        for op in schedule:
+            self.clock.schedule(op["t"], lambda op=op: self._chaos_op(op))
+
+    def _chaos_op(self, op: dict) -> None:
+        kind = op["op"]
+        if kind == "kill":
+            alive = self.cluster.alive_hosts()
+            if len(alive) > 1:
+                host = self.rng.choice(alive)
+                self.cluster.kill_host(host.host_id)
+                self.kills += 1
+        elif kind == "add":
+            self.cluster.add_host()
+            self.adds += 1
+        elif kind == "remove":
+            alive = self.cluster.alive_hosts()
+            if len(alive) > 1:
+                self.cluster.remove_host(self.rng.choice(alive).host_id)
+                self.removes += 1
+        elif kind == "revive":
+            dead = [h for h in self.cluster.hosts if not h.alive]
+            if dead:
+                self.cluster.revive_host(self.rng.choice(dead).host_id)
+                self.revives += 1
+        elif kind == "store_slow":
+            self.agent.store_slow = float(op.get("factor", 4.0))
+            self.clock.schedule(float(op["duration"]),
+                                lambda: setattr(self.agent, "store_slow", 1.0))
+        elif kind == "peer_slow":
+            self.agent.peer_slow = float(op.get("factor", 4.0))
+            self.clock.schedule(float(op["duration"]),
+                                lambda: setattr(self.agent, "peer_slow", 1.0))
+        elif kind == "crash_window":
+            self.agent.crash_p = float(op.get("p", 0.02))
+            self.clock.schedule(float(op["duration"]),
+                                lambda: setattr(self.agent, "crash_p", 0.0))
+        else:
+            raise ValueError(f"unknown chaos op: {kind!r}")
+
+    # ----------------------------------------------------------------- run
+    def run(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        chaos = cfg.chaos if cfg.chaos is not None \
+            else default_chaos(cfg.duration_s)
+        t_wall = time.perf_counter()
+        self._arrivals()
+        self._apply_chaos(chaos)
+        self.clock.run_until_idle()
+        wall_s = time.perf_counter() - t_wall
+        self.dispatcher.close()
+
+        lat_ms = np.asarray(self.latencies) * 1e3
+        q = (np.percentile(lat_ms, [50, 95, 99, 99.9])
+             if lat_ms.size else [float("nan")] * 4)
+        placement = self.cluster.scheduler.summary()
+        unsettled = self.submitted - self.settled
+        residual_load = sum(h.load for h in self.cluster.hosts)
+        slo_met = (unsettled == 0 and self.failed == 0
+                   and lat_ms.size > 0 and float(q[2]) <= cfg.slo_ms)
+        return {
+            "bench": "scale_chaos",
+            "schema_version": 1,
+            "config": {
+                "n_requests": cfg.n_requests, "n_hosts": cfg.n_hosts,
+                "slots_per_host": cfg.slots_per_host,
+                "rate_rps": cfg.rate_rps, "n_functions": cfg.n_functions,
+                "seed": cfg.seed, "slo_ms": cfg.slo_ms,
+                "hedge_factor": cfg.hedge_factor,
+                "max_retries": cfg.max_retries,
+                "speculative": cfg.speculative,
+                "chaos": chaos,
+            },
+            "requests": {
+                "submitted": self.submitted, "settled": self.settled,
+                "ok": self.ok, "failed": self.failed,
+                "unsettled": unsettled, "residual_load": residual_load,
+                "failures_sample": self.failures[:5],
+            },
+            "latency_ms": {
+                "p50": float(q[0]), "p95": float(q[1]), "p99": float(q[2]),
+                "p999": float(q[3]),
+                "mean": float(lat_ms.mean()) if lat_ms.size else float("nan"),
+                "max": float(lat_ms.max()) if lat_ms.size else float("nan"),
+            },
+            "slo": {
+                "slo_ms": cfg.slo_ms, "met": bool(slo_met),
+                "violation_frac": float((lat_ms > cfg.slo_ms).mean())
+                if lat_ms.size else 1.0,
+            },
+            "dispatcher": {
+                "retries": self.dispatcher.retries,
+                "hedges_launched": self.dispatcher.hedges_launched,
+                "preboots_launched": self.dispatcher.preboots_launched,
+                "crashes_injected": self.agent.crashes_injected,
+                "boots": self.agent.boots,
+            },
+            "placement": {
+                "program_hit_rate": placement["program_hit_rate"],
+                "peer_fetches": placement["peer_fetches"],
+                "store_fetches": placement["store_fetches"],
+                "routed": placement["routed"],
+                "affinity_routed": placement["affinity_routed"],
+            },
+            "churn": {
+                "kills": self.kills, "adds": self.adds,
+                "revives": self.revives, "removes": self.removes,
+                "hosts_final": len(self.cluster.hosts),
+                "hosts_alive_final": len(self.cluster.alive_hosts()),
+            },
+            "clock": {
+                "virtual_s": self.clock.now(),
+                "events": self.clock.events_fired,
+            },
+            "wall_s": wall_s,
+        }
+
+
+def run_scale(cfg: ScaleConfig) -> Dict[str, Any]:
+    return ScaleRunner(cfg).run()
+
+
+# ----------------------------------------------------------------------- CLI
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--requests", type=int, default=100_000)
+    ap.add_argument("--hosts", type=int, default=64)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--rate", type=float, default=2000.0)
+    ap.add_argument("--functions", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--slo-ms", type=float, default=400.0)
+    ap.add_argument("--no-speculative", action="store_true")
+    ap.add_argument("--chaos-file", type=str, default=None,
+                    help="JSON list of chaos ops (docs/BENCHMARKS.md)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: 1e4 requests over 16 hosts")
+    ap.add_argument("--out", type=str, default=str(ROOT / "BENCH_6_scale.json"))
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.requests = min(args.requests, 10_000)
+        args.hosts = min(args.hosts, 16)
+        args.rate = min(args.rate, 800.0)
+        args.functions = min(args.functions, 16)
+
+    chaos = None
+    if args.chaos_file:
+        chaos = json.loads(Path(args.chaos_file).read_text())
+
+    cfg = ScaleConfig(
+        n_requests=args.requests, n_hosts=args.hosts,
+        slots_per_host=args.slots, rate_rps=args.rate,
+        n_functions=args.functions, seed=args.seed, slo_ms=args.slo_ms,
+        speculative=not args.no_speculative, chaos=chaos)
+    result = run_scale(cfg)
+
+    out = Path(args.out)
+    out.write_text(json.dumps(result, indent=2, sort_keys=True) + "\n")
+
+    r, l, s = result["requests"], result["latency_ms"], result["slo"]
+    print(f"bench-scale: {r['submitted']} requests over "
+          f"{result['config']['n_hosts']}->"
+          f"{result['churn']['hosts_final']} hosts "
+          f"({result['churn']['kills']} kills / {result['churn']['adds']} adds)"
+          f" in {result['clock']['virtual_s']:.1f} virtual s / "
+          f"{result['wall_s']:.1f} wall s "
+          f"({result['clock']['events']} events)")
+    print(f"bench-scale: p50={l['p50']:.1f} p95={l['p95']:.1f} "
+          f"p99={l['p99']:.1f} p99.9={l['p999']:.1f} ms "
+          f"vs SLO p99<={s['slo_ms']:.0f} ms -> "
+          f"{'OK' if s['met'] else 'BREACH'}")
+    print(f"bench-scale: retries={result['dispatcher']['retries']} "
+          f"hedges={result['dispatcher']['hedges_launched']} "
+          f"preboots={result['dispatcher']['preboots_launched']} "
+          f"crashes={result['dispatcher']['crashes_injected']} "
+          f"hit_rate={result['placement']['program_hit_rate']:.3f}")
+    print(f"bench-scale: wrote {out}")
+
+    if r["unsettled"] or r["residual_load"]:
+        print(f"bench-scale: FAIL — {r['unsettled']} unsettled request(s), "
+              f"residual load {r['residual_load']}")
+        return 1
+    if r["failed"]:
+        print(f"bench-scale: FAIL — {r['failed']} request(s) failed")
+        return 1
+    if not s["met"]:
+        print("bench-scale: FAIL — SLO breached")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

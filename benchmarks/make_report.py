@@ -198,6 +198,34 @@ def placement_table() -> str:
     return "\n".join(rows)
 
 
+def scale_table() -> str:
+    """Virtual-time scale/chaos harness headline numbers, from the
+    ``BENCH_*_scale.json`` report(s) bench_scale.py writes at the repo root."""
+    import json
+    reports = sorted(ROOT.glob("BENCH_*_scale.json"))
+    if not reports:
+        return "(run benchmarks/bench_scale.py to populate)"
+    rows = ["| requests | hosts | kills/adds/revives | p50 ms | p95 ms | "
+            "p99 ms | p99.9 ms | SLO p99 ms | met | retries | hedges | "
+            "hit rate | virtual s | wall s |",
+            "|---|" + "---|" * 13]
+    for path in reports:
+        d = json.loads(path.read_text())
+        c, lat, ch = d["config"], d["latency_ms"], d["churn"]
+        rows.append(
+            f"| {d['requests']['submitted']} "
+            f"| {c['n_hosts']}→{ch['hosts_final']} "
+            f"| {ch['kills']}/{ch['adds']}/{ch['revives']} "
+            f"| {lat['p50']:.1f} | {lat['p95']:.1f} | {lat['p99']:.1f} "
+            f"| {lat['p999']:.1f} | {d['slo']['slo_ms']:.0f} "
+            f"| {'yes' if d['slo']['met'] else 'NO'} "
+            f"| {d['dispatcher']['retries']} "
+            f"| {d['dispatcher']['hedges_launched']} "
+            f"| {d['placement']['program_hit_rate']:.3f} "
+            f"| {d['clock']['virtual_s']:.1f} | {d['wall_s']:.1f} |")
+    return "\n".join(rows)
+
+
 def variants_table() -> str:
     recs = [r for r in load_records(variant=None) if r["variant"] != "baseline"]
     if not recs:
@@ -233,6 +261,10 @@ SKELETON = """# Experiments
 
 <!-- PLACEMENT_TABLE -->
 
+## Scale/chaos under virtual time
+
+<!-- SCALE_TABLE -->
+
 ## Multi-pod dry run
 
 <!-- DRYRUN_TABLE -->
@@ -255,6 +287,7 @@ TABLES = (
     ("DELTA_TABLE", "Delta restore (chunked snapshots)", delta_table),
     ("COALESCING_TABLE", "Coalescing under open-loop load", coalescing_table),
     ("PLACEMENT_TABLE", "Placement under multi-host load", placement_table),
+    ("SCALE_TABLE", "Scale/chaos under virtual time", scale_table),
     ("DRYRUN_TABLE", "Multi-pod dry run", dryrun_table),
     ("ROOFLINE_TABLE", "Roofline", roofline_table),
     ("VARIANTS_TABLE", "Variants", variants_table),

@@ -22,6 +22,7 @@ from repro.core.drivers import ALL_DRIVERS, make_drivers  # noqa: F401
 from repro.core.executor import Executor, ExecutorState  # noqa: F401
 from repro.core.gateway import Gateway  # noqa: F401
 from repro.core.metrics import LatencyStats, Recorder, Timeline  # noqa: F401
+from repro.core.simclock import REAL, Clock, RealClock, VirtualClock  # noqa: F401
 from repro.core.scheduler import (  # noqa: F401
     CacheDirectory,
     HostArtifactCache,

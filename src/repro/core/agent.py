@@ -27,13 +27,16 @@ from repro.core.boot import BootCancelled, BootHandle
 from repro.core.cluster import Host
 from repro.core.deploy import Deployment
 from repro.core.executor import Executor
-from repro.core.metrics import Recorder, ResidencyTracker, Timeline, now
+from repro.core.metrics import Recorder, ResidencyTracker, Timeline
+from repro.core.metrics import now as _default_now
 
 
 class Agent:
-    def __init__(self, recorder: Recorder, residency: ResidencyTracker) -> None:
+    def __init__(self, recorder: Recorder, residency: ResidencyTracker,
+                 clock=None) -> None:
         self.recorder = recorder
         self.residency = residency
+        self._now = clock.now if clock is not None else _default_now
         # executor acquisitions (boots, pool checkouts, donor reuses) — with
         # coalescing, requests_served / boots is the boots-per-request metric
         self.boots = 0
@@ -76,17 +79,17 @@ class Agent:
     def handle(self, host: Host, dep: Deployment, tokens: Optional[np.ndarray],
                driver_name: str, tl: Timeline, label: Optional[str] = None,
                preboot: Optional[BootHandle] = None) -> Any:
-        tl.t_dispatch = now()
+        tl.t_dispatch = self._now()
         host.check_alive()
 
         if driver_name == "noop":                       # gateway/dispatch floor probe
-            tl.t_start_begin = tl.t_exec_begin = now()
-            tl.t_done = now()
+            tl.t_start_begin = tl.t_exec_begin = self._now()
+            tl.t_done = self._now()
             self.recorder.add(label or "noop", tl)
             return None
 
         driver = host.drivers[driver_name]
-        tl.t_start_begin = now()
+        tl.t_start_begin = self._now()
         ex = self._claim_or_start(driver, dep, tl, preboot)
         try:
             host.check_alive()
@@ -99,7 +102,7 @@ class Agent:
                 self.residency.add_residency(ex.nbytes, ex.resident_seconds,
                                              ex.busy_seconds)
             raise
-        tl.t_exec_begin = now()
+        tl.t_exec_begin = self._now()
         try:
             out = ex.run(tokens)
         except Exception:
@@ -116,7 +119,7 @@ class Agent:
             self.residency.add_residency(ex.nbytes, ex.resident_seconds,
                                          ex.busy_seconds)
         host.check_alive()
-        tl.t_done = now()
+        tl.t_done = self._now()
         self.recorder.add(label or f"{dep.name}:{driver_name}", tl)
         return np.asarray(out)
 
@@ -132,10 +135,10 @@ class Agent:
         and execution stamps but keeping each request's own enqueue time — so
         queue-delay (which includes the coalescing window) stays per-request.
         """
-        tl.t_dispatch = now()
+        tl.t_dispatch = self._now()
         host.check_alive()
         driver = host.drivers[driver_name]
-        tl.t_start_begin = now()
+        tl.t_start_begin = self._now()
         ex = self._claim_or_start(driver, dep, tl, preboot,
                                   bucket_rows=batch.padded_rows)
         try:
@@ -146,7 +149,7 @@ class Agent:
                 self.residency.add_residency(ex.nbytes, ex.resident_seconds,
                                              ex.busy_seconds)
             raise
-        tl.t_exec_begin = now()
+        tl.t_exec_begin = self._now()
         try:
             out = ex.run_batch(batch.tokens, valid_rows=batch.valid_rows)
         except Exception:
@@ -162,7 +165,7 @@ class Agent:
             self.residency.add_residency(ex.nbytes, ex.resident_seconds,
                                          ex.busy_seconds)
         host.check_alive()
-        tl.t_done = now()
+        tl.t_done = self._now()
         tl.batch_size = batch.n_requests
         base_label = label or f"{dep.name}:{driver_name}"
         for i, t_enq in enumerate(batch.enqueue_times):

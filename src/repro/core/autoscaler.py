@@ -23,10 +23,11 @@ import math
 import threading
 from typing import Dict, List, Optional
 
+from repro.core import metrics
 from repro.core.cluster import Cluster
 from repro.core.deploy import Deployment
 from repro.core.drivers import WarmDriver
-from repro.core.metrics import now
+from repro.core.simclock import Clock
 
 
 class ColdOnlyScaler:
@@ -64,7 +65,8 @@ class WarmPoolAutoscaler:
 
     def __init__(self, cluster: Cluster, deployments: Dict[str, Deployment], *,
                  interval_s: float = 0.25, idle_timeout_s: float = 5.0,
-                 headroom: float = 1.5, max_pool: int = 8) -> None:
+                 headroom: float = 1.5, max_pool: int = 8,
+                 clock: Optional[Clock] = None) -> None:
         self.mode = "warm"
         self.cluster = cluster
         self.deployments = deployments
@@ -72,16 +74,19 @@ class WarmPoolAutoscaler:
         self.idle_timeout_s = idle_timeout_s
         self.headroom = headroom
         self.max_pool = max_pool
+        self._clock = clock if clock is not None else metrics.get_clock()
+        self._now = self._clock.now
         self._arrivals: Dict[str, List[float]] = {}
         self._service: Dict[str, float] = {}
         self._last_seen: Dict[str, float] = {}
         self._lock = threading.Lock()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
+        self._tick_event = None             # virtual-clock recurring tick
 
     # ------------------------------------------------------------ observations
     def observe_arrival(self, fn_name: str) -> None:
-        t = now()
+        t = self._now()
         with self._lock:
             buf = self._arrivals.setdefault(fn_name, [])
             buf.append(t)
@@ -97,24 +102,34 @@ class WarmPoolAutoscaler:
     # ---------------------------------------------------------------- control
     def target(self, fn_name: str) -> int:
         """Little's law: concurrency = arrival_rate x service_time, with headroom."""
+        # ONE timestamp for both the idle check and the rate window — two
+        # now() reads used to skew the window against the idle cutoff
+        t = self._now()
         with self._lock:
             buf = list(self._arrivals.get(fn_name, []))
             svc = self._service.get(fn_name, 0.05)
             last = self._last_seen.get(fn_name, 0.0)
-        if not buf or now() - last > self.idle_timeout_s:
+        if not buf or t - last > self.idle_timeout_s:
             return 0
         horizon = 2.0
-        recent = [t for t in buf if t > now() - horizon]
+        recent = [x for x in buf if x > t - horizon]
         rate = len(recent) / horizon
         return min(self.max_pool, int(math.ceil(rate * svc * self.headroom)))
 
     def _tick(self) -> None:
         for name, dep in list(self.deployments.items()):
             tgt = self.target(name)
-            for host in self.cluster.alive_hosts():
+            # distribute the cluster-wide target: ceil-per-host used to hand
+            # EVERY host the rounded-up share, overshooting the target by up
+            # to n_hosts - 1 executors of phantom warm residency
+            alive = sorted(self.cluster.alive_hosts(), key=lambda h: h.host_id)
+            if not alive:
+                continue
+            base, rem = divmod(tgt, len(alive))
+            for i, host in enumerate(alive):
                 warm: WarmDriver = host.drivers["warm"]  # type: ignore[assignment]
                 have = warm.pool_size(dep.image.key)
-                per_host_target = max(0, int(math.ceil(tgt / max(len(self.cluster.alive_hosts()), 1))))
+                per_host_target = base + (1 if i < rem else 0)
                 if have < per_host_target:
                     try:
                         warm.prewarm(dep, per_host_target - have)
@@ -131,11 +146,28 @@ class WarmPoolAutoscaler:
                 pass
 
     def start(self) -> None:
+        if self._clock.virtual:
+            # no control thread under virtual time: the tick is a recurring
+            # event on the simulation clock, re-armed until stop()
+            def tick_event() -> None:
+                if self._stop.is_set():
+                    return
+                try:
+                    self._tick()
+                except Exception:
+                    pass
+                self._tick_event = self._clock.schedule(self.interval_s,
+                                                        tick_event)
+            self._tick_event = self._clock.schedule(self.interval_s, tick_event)
+            return
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
 
     def stop(self) -> None:
         self._stop.set()
+        if self._tick_event is not None:
+            self._tick_event.cancel()
+            self._tick_event = None
         if self._thread is not None:
             self._thread.join(timeout=2.0)
 

@@ -39,7 +39,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.metrics import Series, now
+from repro.core import metrics
+from repro.core.metrics import Series
+from repro.core.simclock import Clock
 from repro.core.timerwheel import DeadlineTimer, TimerEntry
 
 
@@ -103,10 +105,10 @@ class _Pending:
     __slots__ = ("tokens", "future", "t_enqueue", "label", "speculative")
 
     def __init__(self, tokens: np.ndarray, future: Future, label: Optional[str],
-                 speculative: Optional[bool] = None):
+                 t_enqueue: float, speculative: Optional[bool] = None):
         self.tokens = tokens
         self.future = future
-        self.t_enqueue = now()
+        self.t_enqueue = t_enqueue
         self.label = label
         self.speculative = speculative
 
@@ -158,11 +160,14 @@ class Coalescer:
     one parked thread, not 10k.
     """
 
-    def __init__(self, dispatcher, config: Optional[BatchingConfig] = None) -> None:
+    def __init__(self, dispatcher, config: Optional[BatchingConfig] = None,
+                 clock: Optional[Clock] = None) -> None:
         self.dispatcher = dispatcher
         self.cfg = config or BatchingConfig()
+        self._clock = clock if clock is not None else metrics.get_clock()
+        self._now = self._clock.now
         self._queues: Dict[Tuple[str, str], _FnQueue] = {}
-        self._timer = DeadlineTimer("coalescer-flush")
+        self._timer = DeadlineTimer("coalescer-flush", clock=self._clock)
         self._lock = threading.Lock()
         self._inflight: set = set()
         self._draining = False
@@ -195,7 +200,8 @@ class Coalescer:
                                                  needs_bucket_image, self.cfg)
             self.requests += 1
         with q.lock:
-            q.pending.append(_Pending(tokens, fut, label, speculative))
+            q.pending.append(_Pending(tokens, fut, label, self._now(),
+                                      speculative))
             n = len(q.pending)
             flush_now = self._draining or n >= self.cfg.max_batch
             if not flush_now and n == 1:
@@ -210,7 +216,7 @@ class Coalescer:
         with self._lock:
             self._draining = True
             queues = list(self._queues.values())
-        deadline = now() + timeout
+        deadline = self._now() + timeout
         while True:
             for q in queues:
                 self._flush(q)
@@ -218,10 +224,16 @@ class Coalescer:
                 inflight = list(self._inflight)
             if not inflight and not any(q.pending for q in queues):
                 return
-            remaining = deadline - now()
+            remaining = deadline - self._now()
             if remaining <= 0:
                 return
-            if inflight:
+            if self._clock.virtual:
+                # virtual time: the drain caller IS the event-loop driver, so
+                # pump the clock instead of blocking on futures that can only
+                # complete via events we would be preventing
+                if not self._clock.run_until_idle():
+                    return          # nothing can make further progress
+            elif inflight:
                 wait(inflight, timeout=min(1.0, remaining))
 
     def summary(self) -> Dict[str, float]:
@@ -267,7 +279,7 @@ class Coalescer:
             self._dispatch(q, members)
 
     def _dispatch(self, q: _FnQueue, members: List[_Pending]) -> None:
-        t_flush = now()
+        t_flush = self._now()
         # per-call speculative opt-ins survive coalescing: any member asking
         # for a speculative pre-boot gets one for the whole batch
         speculative = True if any(m.speculative for m in members) else None
@@ -333,7 +345,7 @@ class Coalescer:
         """Grow the window only while queue-delay stays under
         ``delay_fraction`` x observed service time; shrink otherwise."""
         cfg = self.cfg
-        service = now() - t_flush              # dispatch queue + boot + run
+        service = self._now() - t_flush        # dispatch queue + boot + run
         with q.lock:
             prev = q.service_ewma
             q.service_ewma = service if prev is None else 0.8 * prev + 0.2 * service

@@ -16,7 +16,9 @@ so per-boot artifact cost drops as hosts are added instead of staying flat.
 Invariants: ``Host.load`` counts exactly the work that entered the pool —
 every increment has a matching decrement, including when the pool rejects a
 submission at shutdown (no phantom load); ``kill`` never loses accepted work
-silently — it surfaces as HostFailure for the dispatcher to retry.
+silently — it surfaces as HostFailure for the dispatcher to retry; host ids
+are stable and NEVER equal to list position once ``add_host``/``remove_host``
+churn membership mid-run — lookups go through ``host_by_id``.
 """
 from __future__ import annotations
 
@@ -91,13 +93,64 @@ class Cluster:
     def __init__(self, n_hosts: int = 1, slots_per_host: int = 4, on_exit=None,
                  scheduler: Union[SchedulerConfig, None] = None) -> None:
         self.scheduler = Scheduler(self, scheduler or SchedulerConfig())
-        self.hosts: List[Host] = [
-            Host(i, slots_per_host, on_exit=on_exit,
-                 cache=self.scheduler.make_cache(i))
-            for i in range(n_hosts)]
+        self._slots_per_host = slots_per_host
+        self._on_exit = on_exit
+        self._lock = threading.Lock()
+        self._next_id = n_hosts
+        # the hosts list is copy-on-write: add/remove swap in a fresh list so
+        # concurrent iterators (scheduler scoring, shutdown, reports) always
+        # see a consistent snapshot without taking the membership lock
+        self.hosts: List[Host] = [self._make_host(i, slots_per_host)
+                                  for i in range(n_hosts)]
+
+    def _make_host(self, host_id: int, n_slots: int) -> Host:
+        """Host factory — the scale harness overrides this to build simulated
+        hosts that share the cluster's scheduler caches and virtual clock."""
+        return Host(host_id, n_slots, on_exit=self._on_exit,
+                    cache=self.scheduler.make_cache(host_id))
 
     def alive_hosts(self) -> List[Host]:
         return [h for h in self.hosts if h.alive]
+
+    def host_by_id(self, host_id: int) -> Optional[Host]:
+        """The host with this id, dead or alive — NEVER index ``hosts`` by id:
+        once hosts churn mid-run, id and list position diverge."""
+        for h in self.hosts:
+            if h.host_id == host_id:
+                return h
+        return None
+
+    def _require(self, host_id: int) -> Host:
+        host = self.host_by_id(host_id)
+        if host is None:
+            raise KeyError(f"no host with id {host_id}")
+        return host
+
+    def add_host(self, n_slots: Optional[int] = None) -> Host:
+        """Join a fresh host mid-run (chaos/scale-out). Ids are never reused,
+        so HRW placement re-ranks only the keys the new host wins."""
+        with self._lock:
+            host_id = self._next_id
+            self._next_id += 1
+            host = self._make_host(host_id,
+                                   n_slots or self._slots_per_host)
+            self.hosts = self.hosts + [host]
+        return host
+
+    def remove_host(self, host_id: int) -> Host:
+        """Decommission a host: kill it (in-flight work surfaces HostFailure
+        for the dispatcher to retry) and drop it from membership."""
+        host = self._require(host_id)
+        host.kill()
+        with self._lock:
+            self.hosts = [h for h in self.hosts if h.host_id != host_id]
+        host.shutdown()
+        return host
+
+    def revive_host(self, host_id: int) -> Host:
+        host = self._require(host_id)
+        host.revive()
+        return host
 
     def route(self, image_key: Optional[str] = None,
               bucket_rows: Optional[int] = None,
@@ -114,7 +167,7 @@ class Cluster:
         return host
 
     def kill_host(self, host_id: int) -> None:
-        self.hosts[host_id].kill()
+        self._require(host_id).kill()
 
     def shutdown(self) -> None:
         for h in self.hosts:

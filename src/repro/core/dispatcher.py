@@ -31,11 +31,13 @@ import threading
 from concurrent.futures import Future
 from typing import Dict, Optional
 
+from repro.core import metrics
 from repro.core.agent import Agent
 from repro.core.batching import CoalescedBatch, settle_quietly as _settle
 from repro.core.cluster import Cluster, HostFailure
 from repro.core.deploy import Deployment
-from repro.core.metrics import P2Quantile, Timeline, now
+from repro.core.metrics import P2Quantile, Timeline
+from repro.core.simclock import Clock
 from repro.core.timerwheel import DeadlineTimer
 
 
@@ -80,19 +82,23 @@ def _is_transient(err: BaseException) -> bool:
 class Dispatcher:
     def __init__(self, cluster: Cluster, agent: Agent, *,
                  max_retries: int = 3, hedge_factor: float = 3.0,
-                 hedging: bool = True, speculative: bool = False) -> None:
+                 hedging: bool = True, speculative: bool = False,
+                 clock: Optional[Clock] = None) -> None:
         self.cluster = cluster
         self.agent = agent
         self.max_retries = max_retries
         self.hedge_factor = hedge_factor
         self.hedging = hedging
         self.speculative = speculative
+        self._clock = clock if clock is not None else metrics.get_clock()
+        self._now = self._clock.now
         self.latency = _LatencyModel()
         self.hedges_launched = 0
         self.preboots_launched = 0
         self.retries = 0
         self._lock = threading.Lock()
-        self._hedge_timer = DeadlineTimer("dispatcher-hedge-timer")
+        self._hedge_timer = DeadlineTimer("dispatcher-hedge-timer",
+                                          clock=self._clock)
 
     # ------------------------------------------------------------------ public
     def submit(self, dep: Optional[Deployment], tokens, driver_name: str,
@@ -100,8 +106,10 @@ class Dispatcher:
                speculative: Optional[bool] = None) -> Future:
         """Dispatch one request; returns a Future with the result."""
         result: Future = Future()
-        tl = Timeline(t_enqueue=now())
+        tl = Timeline(t_enqueue=self._now())
         spec = self.speculative if speculative is None else speculative
+        # ONE mutable tried-set per request, shared by every attempt (primary,
+        # retries, hedges) — see _attempt for the atomicity contract
         self._attempt(result, dep, tokens, driver_name, tl, tried=set(), n_try=0,
                       label=label, allow_hedge=self.hedging, speculative=spec)
         return result
@@ -168,15 +176,21 @@ class Dispatcher:
             bucket_rows = batch.padded_rows
         image = getattr(dep, "image", None)      # noop probes / test stand-ins
         try:
-            host = self.cluster.route(image.key if image is not None else None,
-                                      bucket_rows=bucket_rows, exclude=tried,
-                                      strict=hedge)
+            with self._lock:
+                # route + tried-set update are one atomic step: ``tried`` is
+                # the request's SINGLE mutable set, so a hedge firing after a
+                # retry (or concurrently with one) excludes every host any
+                # attempt has touched — rebuilding ``tried | {id}`` into new
+                # sets here used to let a late hedge land on a retry's host
+                host = self.cluster.route(
+                    image.key if image is not None else None,
+                    bucket_rows=bucket_rows, exclude=tried, strict=hedge)
+                tried.add(host.host_id)
         except HostFailure as e:
             if hedge:
                 return False        # primary still owns the request — no backup
             _settle(result, error=e)
             return False
-        tried = tried | {host.host_id}
 
         preboot = None
         if speculative and dep is not None:

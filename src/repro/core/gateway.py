@@ -35,6 +35,7 @@ from repro.core.deploy import Deployment, deploy
 from repro.core.dispatcher import Dispatcher
 from repro.core.metrics import LatencyStats, Recorder, ResidencyTracker
 from repro.core.scheduler import SchedulerConfig
+from repro.core.simclock import Clock
 from repro.core.snapshot import SnapshotStore
 
 
@@ -43,7 +44,8 @@ class Gateway:
                  mode: str = "cold", work_dir: Optional[str] = None,
                  hedging: bool = True, speculative: bool = False,
                  batching: Union[bool, BatchingConfig] = False,
-                 scheduler: Optional[SchedulerConfig] = None) -> None:
+                 scheduler: Optional[SchedulerConfig] = None,
+                 clock: Optional[Clock] = None) -> None:
         assert mode in ("cold", "warm")
         self.mode = mode
         self.work_dir = work_dir or tempfile.mkdtemp(prefix="repro_faas_")
@@ -58,16 +60,17 @@ class Gateway:
         self.residency = ResidencyTracker()
         self.cluster = Cluster(n_hosts=n_hosts, slots_per_host=slots_per_host,
                                on_exit=self._account_exit, scheduler=scheduler)
-        self.agent = Agent(self.recorder, self.residency)
+        self.agent = Agent(self.recorder, self.residency, clock=clock)
         self.dispatcher = Dispatcher(self.cluster, self.agent, hedging=hedging,
-                                     speculative=speculative)
+                                     speculative=speculative, clock=clock)
         self.coalescer: Optional[Coalescer] = None
         if batching:
             cfg = batching if isinstance(batching, BatchingConfig) else BatchingConfig()
-            self.coalescer = Coalescer(self.dispatcher, cfg)
+            self.coalescer = Coalescer(self.dispatcher, cfg, clock=clock)
         self.deployments: Dict[str, Deployment] = {}
         if mode == "warm":
-            self.scaler = WarmPoolAutoscaler(self.cluster, self.deployments)
+            self.scaler = WarmPoolAutoscaler(self.cluster, self.deployments,
+                                             clock=clock)
         else:
             self.scaler = ColdOnlyScaler()
         self.scaler.start()

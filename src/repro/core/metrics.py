@@ -14,12 +14,14 @@ only ever accumulate (one delta restore per boot, summed across retries).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import threading
-import time
 from typing import Dict, List
 
 import numpy as np
+
+from repro.core.simclock import REAL, Clock
 
 
 @dataclasses.dataclass
@@ -301,5 +303,37 @@ class ResidencyTracker:
             }
 
 
+_clock: "Clock" = REAL
+
+
+def get_clock() -> "Clock":
+    """The process-default clock (REAL unless a test/harness installed one)."""
+    return _clock
+
+
+def set_clock(clock: "Clock | None") -> "Clock":
+    """Install a process-default clock; returns the previous one.
+
+    Most consumers take an explicit ``clock=`` parameter — prefer that. This
+    global exists for the bare ``now()`` call sites (Timeline stamping deep in
+    drivers/boot) that predate injection; the scale harness injects clocks
+    explicitly and never touches it.
+    """
+    global _clock
+    prev = _clock
+    _clock = clock if clock is not None else REAL
+    return prev
+
+
+@contextlib.contextmanager
+def use_clock(clock: "Clock"):
+    """Temporarily install ``clock`` as the process default (tests)."""
+    prev = set_clock(clock)
+    try:
+        yield clock
+    finally:
+        set_clock(prev)
+
+
 def now() -> float:
-    return time.perf_counter()
+    return _clock.now()

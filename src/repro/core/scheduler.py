@@ -419,6 +419,11 @@ class Scheduler:
         self._lock = threading.Lock()
         self.routed = 0
         self.affinity_routed = 0        # landed on a host already caching the program
+        # HRW preferred-set memo: keyed by artifact key, valid only for the
+        # alive-membership it was computed against. At fleet scale the
+        # per-route blake2b over every (key, host) pair dominates routing
+        # cost; membership changes (kill/add/revive) simply miss the memo.
+        self._hrw_memo: Dict[str, Tuple[Tuple[int, ...], Set[int]]] = {}
 
     def make_cache(self, host_id: int) -> HostArtifactCache:
         cache = HostArtifactCache(host_id, self.cfg, self.directory)
@@ -455,8 +460,7 @@ class Scheduler:
                          key=lambda h: (h.load, (h.host_id + rr) % len(candidates)))
         else:
             pkey = program_artifact_key(image_key, bucket_rows)
-            preferred = set(hrw_hosts(pkey, [h.host_id for h in alive],
-                                      self.cfg.replicas))
+            preferred = self._preferred(pkey, [h.host_id for h in alive])
 
             def cost(h) -> float:
                 cache = getattr(h, "cache", None)
@@ -476,6 +480,20 @@ class Scheduler:
                 with self._lock:
                     self.affinity_routed += 1
         return chosen
+
+    def _preferred(self, pkey: str, alive_ids: List[int]) -> Set[int]:
+        """HRW replica set for ``pkey`` over the current alive membership,
+        memoized until membership changes (ids are stable, so the sorted
+        tuple is a complete validity token)."""
+        token = tuple(sorted(alive_ids))
+        with self._lock:
+            memo = self._hrw_memo.get(pkey)
+            if memo is not None and memo[0] == token:
+                return memo[1]
+        preferred = set(hrw_hosts(pkey, alive_ids, self.cfg.replicas))
+        with self._lock:
+            self._hrw_memo[pkey] = (token, preferred)
+        return preferred
 
     # ----------------------------------------------------------- peer lookup
     def _peer_lookup(self, tier: str, key: str,
@@ -518,10 +536,10 @@ class Scheduler:
         return got
 
     def _live_host(self, hid: int):
-        if not (0 <= hid < len(self.cluster.hosts)):
-            return None
-        host = self.cluster.hosts[hid]
-        if not host.alive or getattr(host, "cache", None) is None:
+        # lookup BY ID: once hosts churn mid-run, id != list position
+        host = self.cluster.host_by_id(hid)
+        if host is None or not host.alive \
+                or getattr(host, "cache", None) is None:
             return None
         return host
 

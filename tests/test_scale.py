@@ -1,0 +1,427 @@
+"""Churn-race regressions + the scale harness property tests.
+
+The four bugfix regressions in this file are written against the exact
+interleavings that used to break under churn:
+
+* dispatcher: retry/hedge attempts diverging on stale copies of the tried-set
+  (a retry could re-land on the hedge's host);
+* cluster: ``kill_host`` indexing ``hosts`` by id after add/remove churn made
+  id and list position diverge (killed the wrong host, or IndexError);
+* autoscaler: two ``now()`` reads skewing the rate window, and per-host ceil
+  overshooting the cluster-wide target by up to n_hosts - 1;
+* timer: ``close()`` returning while a popped callback was still running.
+
+The property tests drive the full virtual-time harness (benchmarks/
+bench_scale.py) under randomized kill/add/revive chaos and assert the
+settle-exactly-once invariant: every submitted request's Future resolves
+(Future semantics forbid a second resolution — a double settle would raise
+InvalidStateError inside the event loop and fail the run), no host reports
+residual load, and nothing is left on the virtual clock.
+"""
+import json
+import random
+import sys
+import threading
+import time
+from pathlib import Path
+
+import pytest
+
+from repro.core.autoscaler import WarmPoolAutoscaler
+from repro.core.cluster import Cluster
+from repro.core.dispatcher import Dispatcher
+from repro.core.simclock import VirtualClock
+from repro.core.timerwheel import DeadlineTimer
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT))
+
+from benchmarks.bench_scale import (  # noqa: E402
+    ScaleConfig,
+    SimCluster,
+    SimDeployment,
+    XlaRuntimeError,
+    default_chaos,
+    run_scale,
+)
+from benchmarks.bench_scale import main as bench_main  # noqa: E402
+
+
+# ---------------------------------------------------- dispatcher tried-set
+
+class ScriptAgent:
+    """Scriptable sim agent: ``behavior(n)`` -> (virtual seconds, outcome);
+    an exception outcome is raised (surfacing at slot-release time)."""
+
+    def __init__(self, clock, behavior):
+        self.clock = clock
+        self.behavior = behavior
+        self.calls = []
+
+    def handle(self, host, dep, tokens, driver_name, tl, label=None,
+               preboot=None):
+        n = len(self.calls)
+        self.calls.append(host.host_id)
+        charge_s, outcome = self.behavior(n)
+        host.charge(charge_s)
+        t0 = self.clock.now()
+        tl.t_dispatch = tl.t_start_begin = tl.t_exec_begin = t0
+        tl.t_done = t0 + charge_s
+        if isinstance(outcome, BaseException):
+            raise outcome
+        return outcome
+
+
+def test_retry_shares_tried_set_with_hedge():
+    """The churn race: hedge lands on h1 while the primary is still running;
+    the primary then fails and its retry must know the hedge touched h1.
+    With per-attempt set copies the retry's view was {h0} and it re-landed on
+    the hedge's host; the shared set forces it elsewhere (here: the explicit
+    everything-tried fallback, which prefers the idle h0 over busy h1)."""
+    clock = VirtualClock()
+    cluster = SimCluster(clock, n_hosts=3, slots_per_host=2)
+    cluster.kill_host(2)                      # leave exactly {h0, h1} alive
+    # pin h1 with a filler so the primary deterministically routes to h0
+    filler = cluster.host_by_id(1)
+    filler.submit(lambda: filler.charge(100.0))
+
+    def behavior(n):
+        if n == 0:
+            return 1.0, XlaRuntimeError("injected straggler death")  # primary
+        if n == 1:
+            return 10.0, "hedge-slow"                                # hedge
+        return 0.01, "retry-fast"                                    # retry
+
+    agent = ScriptAgent(clock, behavior)
+    disp = Dispatcher(cluster, agent, hedging=True, hedge_factor=3.0,
+                      max_retries=4, clock=clock)
+    for _ in range(10):
+        disp.latency.observe("noop:sim", 0.02)     # hedge deadline = 60 ms
+
+    fut = disp.submit(None, [1], "sim")
+    clock.run_until_idle()
+    disp.close()
+
+    assert fut.result(timeout=0) == "retry-fast"
+    assert disp.hedges_launched == 1
+    # primary -> h0, hedge -> h1 (strict, distinct), retry -> h0 again
+    # (everything tried; fallback picks the idle host). The broken tried-set
+    # made calls [0, 1, 1]: the retry re-landed on the hedge's host.
+    assert agent.calls == [0, 1, 0]
+    assert agent.calls.count(1) == 1
+
+
+def test_hedge_stands_down_when_no_distinct_host():
+    """Strict hedging through the shared set: with every alive host already
+    tried, the timer fires but no backup launches (and none is counted)."""
+    clock = VirtualClock()
+    cluster = SimCluster(clock, n_hosts=1, slots_per_host=2)
+    cluster.add_host()                        # 2 alive (hedging needs > 1)
+
+    def behavior(n):
+        if n == 0:
+            return 1.0, "primary"             # straggler, but finishes
+        return 0.01, "hedge"
+
+    agent = ScriptAgent(clock, behavior)
+    disp = Dispatcher(cluster, agent, hedging=True, hedge_factor=3.0,
+                      clock=clock)
+    for _ in range(10):
+        disp.latency.observe("noop:sim", 0.02)
+
+    fut1 = disp.submit(None, [1], "sim")      # h0: straggler -> hedge to h1
+    clock.run_until_idle()
+    assert fut1.result(timeout=0) == "hedge"
+    assert disp.hedges_launched == 1
+
+    cluster.kill_host(1)                      # only h0 alive now... plus a
+    cluster.revive_host(1)                    # revive: both alive again
+    agent.calls.clear()
+
+    def slow_everywhere(n):
+        return 1.0, f"attempt-{n}"
+
+    agent.behavior = slow_everywhere
+    fut2 = disp.submit(None, [1], "sim")
+    # both hosts get an attempt (primary + hedge); a second hedge deadline
+    # has no distinct host left and must stand down silently
+    clock.run_until_idle()
+    disp.close()
+    assert fut2.result(timeout=0).startswith("attempt-")
+    assert disp.hedges_launched == 2          # exactly one more, never a 3rd
+    assert len(agent.calls) == 2
+    assert set(agent.calls) == {0, 1}
+
+
+# ------------------------------------------------------------ cluster churn
+
+def test_kill_host_is_by_id_not_list_position():
+    cluster = Cluster(n_hosts=3, slots_per_host=1)
+    try:
+        cluster.remove_host(0)                # ids and positions now diverge
+        cluster.kill_host(1)                  # positional indexing killed h2
+        assert not cluster.host_by_id(1).alive
+        assert cluster.host_by_id(2).alive
+        cluster.kill_host(2)                  # positional indexing: IndexError
+        assert not cluster.host_by_id(2).alive
+    finally:
+        cluster.shutdown()
+
+
+def test_kill_unknown_host_raises_keyerror():
+    cluster = Cluster(n_hosts=2, slots_per_host=1)
+    try:
+        with pytest.raises(KeyError):
+            cluster.kill_host(7)
+    finally:
+        cluster.shutdown()
+
+
+def test_add_host_never_reuses_ids():
+    cluster = Cluster(n_hosts=2, slots_per_host=1)
+    try:
+        cluster.remove_host(1)
+        added = cluster.add_host()
+        assert added.host_id == 2             # fresh id, 1 is never reused
+        assert cluster.host_by_id(1) is None
+        assert [h.host_id for h in cluster.hosts] == [0, 2]
+        assert added.cache is not None        # joined the cache directory
+    finally:
+        cluster.shutdown()
+
+
+def test_revive_after_kill_restores_routing():
+    cluster = Cluster(n_hosts=2, slots_per_host=1)
+    try:
+        cluster.kill_host(0)
+        assert [h.host_id for h in cluster.alive_hosts()] == [1]
+        cluster.revive_host(0)
+        assert len(cluster.alive_hosts()) == 2
+        assert cluster.route() is not None
+    finally:
+        cluster.shutdown()
+
+
+# --------------------------------------------------------------- autoscaler
+
+class _FakeWarm:
+    def __init__(self):
+        self.pools = {}
+
+    def pool_size(self, key):
+        return self.pools.get(key, 0)
+
+    def prewarm(self, dep, n):
+        self.pools[dep.image.key] = self.pool_size(dep.image.key) + n
+
+    def expire_idle(self, key, keep):
+        self.pools[key] = min(self.pool_size(key), keep)
+
+    def resident_nbytes(self):
+        return 0
+
+
+class _FakeHost:
+    def __init__(self, hid):
+        self.host_id = hid
+        self.alive = True
+        self.drivers = {"warm": _FakeWarm()}
+
+
+class _FakeCluster:
+    def __init__(self, n):
+        self.hosts = [_FakeHost(i) for i in range(n)]
+
+    def alive_hosts(self):
+        return [h for h in self.hosts if h.alive]
+
+
+def test_autoscaler_target_reads_clock_once():
+    """One timestamp for the idle check AND the rate window — the two-read
+    spelling skewed the window against the cutoff under load."""
+    clock = VirtualClock()
+    scaler = WarmPoolAutoscaler(_FakeCluster(1), {}, clock=clock)
+    scaler.observe_arrival("fn")
+    reads = []
+    real_now = scaler._now
+    scaler._now = lambda: (reads.append(1), real_now())[1]
+    scaler.target("fn")
+    assert len(reads) == 1
+
+
+def test_autoscaler_tick_distributes_remainder():
+    """Cluster-wide target 9 over 4 hosts must place 9 pool slots total
+    ([3,2,2,2]) — per-host ceil used to place ceil(9/4)=3 on EVERY host,
+    overshooting by n_hosts - 1 executors of phantom warm residency."""
+    clock = VirtualClock()
+    cluster = _FakeCluster(4)
+    dep = SimDeployment("fn")
+    scaler = WarmPoolAutoscaler(cluster, {"fn": dep}, headroom=1.5,
+                                max_pool=100, clock=clock)
+    for _ in range(20):                       # 20 arrivals in the 2 s window
+        scaler.observe_arrival("fn")
+    scaler.observe_service_time("fn", 0.6)    # ceil(10/s * 0.6 s * 1.5) = 9
+    assert scaler.target("fn") == 9
+    scaler._tick()
+    pools = [h.drivers["warm"].pool_size(dep.image.key)
+             for h in cluster.hosts]
+    assert sum(pools) == 9
+    assert max(pools) - min(pools) <= 1
+
+
+def test_autoscaler_idle_timeout_on_virtual_clock():
+    clock = VirtualClock()
+    scaler = WarmPoolAutoscaler(_FakeCluster(1), {}, idle_timeout_s=1.0,
+                                clock=clock)
+    for _ in range(10):
+        scaler.observe_arrival("fn")
+    scaler.observe_service_time("fn", 0.5)
+    assert scaler.target("fn") >= 1
+    clock.run_until(1.5)                      # past the idle timeout
+    assert scaler.target("fn") == 0
+
+
+def test_autoscaler_virtual_tick_loop_starts_and_stops():
+    clock = VirtualClock()
+    cluster = _FakeCluster(2)
+    dep = SimDeployment("fn")
+    scaler = WarmPoolAutoscaler(cluster, {"fn": dep}, interval_s=0.25,
+                                clock=clock)
+    for _ in range(16):
+        scaler.observe_arrival("fn")
+    scaler.observe_service_time("fn", 0.5)
+    scaler.start()                            # recurring event, no thread
+    clock.run_until(1.0)
+    total = sum(h.drivers["warm"].pool_size(dep.image.key)
+                for h in cluster.hosts)
+    assert total >= 1
+    scaler.stop()
+    assert clock.pending() == 0               # tick chain fully cancelled
+
+
+# -------------------------------------------------------------- timer close
+
+def test_timer_close_drops_pending_entries():
+    timer = DeadlineTimer("test-close")
+    fired = []
+    timer.schedule(0.05, lambda: fired.append(1))
+    timer.close()
+    time.sleep(0.15)
+    assert fired == []
+
+
+def test_timer_close_joins_inflight_callback():
+    """close() must not return while a popped callback is mid-flight — the
+    unjoined worker used to let callbacks run after close returned."""
+    timer = DeadlineTimer("test-join")
+    started = threading.Event()
+    finished = []
+
+    def slow_callback():
+        started.set()
+        time.sleep(0.2)
+        finished.append(1)
+
+    timer.schedule(0.0, slow_callback)
+    assert started.wait(timeout=2.0)
+    timer.close()                             # blocks on the join
+    assert finished == [1]
+
+
+def test_timer_virtual_mode_fires_and_cancels_inline():
+    clock = VirtualClock()
+    timer = DeadlineTimer("test-virtual", clock=clock)
+    fired = []
+    first = timer.schedule(1.0, lambda: fired.append("a"))
+    timer.schedule(2.0, lambda: fired.append("b"))
+    first.cancel()
+    clock.run_until_idle()
+    assert fired == ["b"]
+    assert timer.pending() == 0
+
+
+def test_timer_virtual_close_cancels_everything():
+    clock = VirtualClock()
+    timer = DeadlineTimer("test-virtual-close", clock=clock)
+    fired = []
+    timer.schedule(1.0, lambda: fired.append(1))
+    assert timer.pending() == 1
+    timer.close()
+    clock.run_until_idle()
+    assert fired == []
+    assert timer.pending() == 0
+    assert timer.schedule(1.0, lambda: fired.append(2)).cancelled
+
+
+# ------------------------------------------------------- harness properties
+
+def _random_chaos(rng, duration_s, n_kills=3, n_adds=3, n_revives=2):
+    ops = []
+    for _ in range(n_kills):
+        ops.append({"t": rng.uniform(0.1, 0.9) * duration_s, "op": "kill"})
+    for _ in range(n_adds):
+        ops.append({"t": rng.uniform(0.1, 0.9) * duration_s, "op": "add"})
+    for _ in range(n_revives):
+        ops.append({"t": rng.uniform(0.3, 0.95) * duration_s, "op": "revive"})
+    ops.append({"t": rng.uniform(0.2, 0.6) * duration_s, "op": "crash_window",
+                "p": 0.03, "duration": 0.2 * duration_s})
+    ops.append({"t": rng.uniform(0.2, 0.6) * duration_s, "op": "store_slow",
+                "factor": 5.0, "duration": 0.2 * duration_s})
+    return sorted(ops, key=lambda o: o["t"])
+
+
+@pytest.mark.parametrize("seed", [1, 2, 3])
+def test_chaos_every_request_settles_exactly_once(seed):
+    """Property: under randomized kill/add/revive churn plus crash and
+    slowdown windows, every request's Future settles (exactly once — a double
+    settle would raise InvalidStateError and crash the event loop), nothing
+    fails past the retry budget, and every host's load drains to zero."""
+    n = 2000
+    cfg = ScaleConfig(n_requests=n, n_hosts=10, slots_per_host=4,
+                      rate_rps=500.0, n_functions=8, seed=seed,
+                      slo_ms=60_000.0)
+    cfg.chaos = _random_chaos(random.Random(seed), cfg.duration_s)
+    result = run_scale(cfg)
+    r = result["requests"]
+    assert r["submitted"] == n
+    assert r["settled"] == n
+    assert r["unsettled"] == 0
+    assert r["failed"] == 0, r["failures_sample"]
+    assert r["residual_load"] == 0
+    assert result["churn"]["kills"] >= 1
+    assert result["churn"]["adds"] == 3
+
+
+def test_chaos_run_is_deterministic_per_seed():
+    cfg = ScaleConfig(n_requests=800, n_hosts=6, rate_rps=400.0,
+                      n_functions=4, seed=7, slo_ms=60_000.0)
+    a = run_scale(cfg)
+    b = run_scale(ScaleConfig(n_requests=800, n_hosts=6, rate_rps=400.0,
+                              n_functions=4, seed=7, slo_ms=60_000.0))
+    for section in ("requests", "latency_ms", "churn", "clock"):
+        assert a[section] == b[section]
+
+
+def test_default_chaos_has_kills_and_adds():
+    ops = default_chaos(100.0)
+    kinds = [o["op"] for o in ops]
+    assert kinds.count("kill") >= 2
+    assert kinds.count("add") >= 2
+    assert all(0.0 <= o["t"] <= 100.0 for o in ops)
+    assert ops == sorted(ops, key=lambda o: o["t"])
+
+
+def test_bench_cli_writes_report_and_gates(tmp_path):
+    out = tmp_path / "bench_scale.json"
+    rc = bench_main(["--requests", "600", "--hosts", "6", "--rate", "300",
+                     "--functions", "4", "--out", str(out)])
+    assert rc == 0
+    data = json.loads(out.read_text())
+    assert data["bench"] == "scale_chaos"
+    assert data["requests"]["unsettled"] == 0
+    assert data["requests"]["failed"] == 0
+    assert data["slo"]["met"] is True
+    assert data["churn"]["kills"] >= 1
+    assert data["churn"]["adds"] >= 1
+    assert data["latency_ms"]["p999"] >= data["latency_ms"]["p50"] > 0
+    assert data["clock"]["virtual_s"] > data["wall_s"]  # faster than real time

@@ -1,0 +1,105 @@
+"""Virtual clock semantics: event ordering, cancellation, horizon runs, and
+the clock-injection plumbing in metrics (set_clock/use_clock)."""
+import pytest
+
+from repro.core import metrics
+from repro.core.simclock import REAL, RealClock, VirtualClock
+
+
+def test_events_fire_in_deadline_then_seq_order():
+    clk = VirtualClock()
+    fired = []
+    clk.schedule(2.0, lambda: fired.append("late"))
+    clk.schedule(1.0, lambda: fired.append("early-a"))
+    clk.schedule(1.0, lambda: fired.append("early-b"))     # same deadline: FIFO
+    assert clk.run_until_idle() == 3
+    assert fired == ["early-a", "early-b", "late"]
+    assert clk.now() == pytest.approx(2.0)
+
+
+def test_now_equals_current_event_deadline():
+    clk = VirtualClock()
+    seen = []
+    clk.schedule(0.5, lambda: seen.append(clk.now()))
+    clk.schedule(1.5, lambda: seen.append(clk.now()))
+    clk.run_until_idle()
+    assert seen == [pytest.approx(0.5), pytest.approx(1.5)]
+
+
+def test_cancelled_event_never_fires():
+    clk = VirtualClock()
+    fired = []
+    ev = clk.schedule(1.0, lambda: fired.append("no"))
+    clk.schedule(2.0, lambda: fired.append("yes"))
+    ev.cancel()
+    clk.run_until_idle()
+    assert fired == ["yes"]
+
+
+def test_callbacks_can_schedule_continuations():
+    clk = VirtualClock()
+    fired = []
+
+    def chain(n):
+        fired.append((clk.now(), n))
+        if n < 3:
+            clk.schedule(1.0, lambda: chain(n + 1))
+
+    clk.schedule(1.0, lambda: chain(1))
+    clk.run_until_idle()
+    assert [n for _, n in fired] == [1, 2, 3]
+    assert fired[-1][0] == pytest.approx(3.0)
+
+
+def test_negative_delay_clamps_to_now():
+    clk = VirtualClock(start=5.0)
+    fired = []
+    clk.schedule(-3.0, lambda: fired.append(clk.now()))
+    clk.run_until_idle()
+    assert fired == [pytest.approx(5.0)]       # never travels back in time
+
+
+def test_run_until_respects_horizon_and_advances_now():
+    clk = VirtualClock()
+    fired = []
+    clk.schedule(1.0, lambda: fired.append(1))
+    clk.schedule(5.0, lambda: fired.append(5))
+    assert clk.run_until(2.5) == 1
+    assert fired == [1]
+    assert clk.now() == pytest.approx(2.5)     # advances even with nothing due
+    assert clk.pending() == 1
+    clk.run_until_idle()
+    assert fired == [1, 5]
+
+
+def test_run_until_idle_max_events_backstop():
+    clk = VirtualClock()
+
+    def rearm():
+        clk.schedule(1.0, rearm)               # self-perpetuating event
+
+    clk.schedule(1.0, rearm)
+    assert clk.run_until_idle(max_events=10) == 10     # bounded, no hang
+
+
+def test_virtual_sleep_is_a_programming_error():
+    with pytest.raises(RuntimeError):
+        VirtualClock().sleep(0.1)
+
+
+def test_real_clock_tracks_wall_time():
+    clk = RealClock()
+    assert not clk.virtual
+    t0 = clk.now()
+    clk.sleep(0.02)
+    assert clk.now() - t0 >= 0.015
+
+
+def test_metrics_use_clock_swaps_and_restores():
+    assert metrics.get_clock() is REAL
+    vclk = VirtualClock(start=42.0)
+    with metrics.use_clock(vclk):
+        assert metrics.get_clock() is vclk
+        assert metrics.now() == pytest.approx(42.0)
+    assert metrics.get_clock() is REAL
+    assert metrics.set_clock(None) is REAL     # None -> REAL, returns previous
