@@ -198,6 +198,30 @@ def placement_table() -> str:
     return "\n".join(rows)
 
 
+def ttfr_table() -> str:
+    """Streamed cold start: TTFR vs the same boot's full-restore wall, from
+    the ``BENCH_*_startup.json`` report(s) bench_startup.py writes at the repo
+    root (the glob covers future startup reports alongside the scale ones)."""
+    import json
+    reports = sorted(ROOT.glob("BENCH_*_startup.json"))
+    if not reports:
+        return "(run benchmarks/bench_startup.py to populate)"
+    rows = ["| spec | split | TTFR ms | head wall ms | full-restore wall ms | "
+            "wall/TTFR | gate (>=2x) | eager cold wall ms |",
+            "|---|" + "---|" * 7]
+    for path in reports:
+        d = json.loads(path.read_text())
+        s = d["streamed"]
+        eager = d.get("eager", {})
+        eager_wall = f"{eager['t_boot_wall_ms']:.1f}" if eager else "—"
+        rows.append(
+            f"| {d['spec']} | {'yes' if d['split_ok'] else 'no'} "
+            f"| {s['ttfr_ms']:.1f} | {s['head_wall_ms']:.1f} "
+            f"| {s['t_boot_wall_ms']:.1f} | {d['ratio_full_wall_over_ttfr']:.2f}x "
+            f"| {'pass' if d['gate']['passed'] else 'FAIL'} | {eager_wall} |")
+    return "\n".join(rows)
+
+
 def scale_table() -> str:
     """Virtual-time scale/chaos harness headline numbers, from the
     ``BENCH_*_scale.json`` report(s) bench_scale.py writes at the repo root."""
@@ -249,6 +273,10 @@ SKELETON = """# Experiments
 
 <!-- STARTUP_TABLE -->
 
+## Streamed cold start (TTFR)
+
+<!-- TTFR_TABLE -->
+
 ## Delta restore (chunked snapshots)
 
 <!-- DELTA_TABLE -->
@@ -284,6 +312,7 @@ SKELETON = """# Experiments
 TABLES = (
     ("STARTUP_TABLE", "Startup breakdown (per boot stage)",
      startup_breakdown_table),
+    ("TTFR_TABLE", "Streamed cold start (TTFR)", ttfr_table),
     ("DELTA_TABLE", "Delta restore (chunked snapshots)", delta_table),
     ("COALESCING_TABLE", "Coalescing under open-loop load", coalescing_table),
     ("PLACEMENT_TABLE", "Placement under multi-host load", placement_table),

@@ -71,7 +71,8 @@ class Agent:
             else:
                 tl.record_boot(result.stage_s, result.wall_s,
                                bytes_fetched=result.bytes_fetched,
-                               bytes_deduped=result.bytes_deduped)
+                               bytes_deduped=result.bytes_deduped,
+                               t_first_ready=result.t_first_ready)
                 tl.preboot = True
                 return result.executor
         return driver.start(dep, tl, bucket_rows=bucket_rows)
@@ -91,6 +92,11 @@ class Agent:
         driver = host.drivers[driver_name]
         tl.t_start_begin = self._now()
         ex = self._claim_or_start(driver, dep, tl, preboot)
+        gates = getattr(ex, "gates", None)
+        if gates is not None:
+            # streamed boot: the tail's background stage timings / bytes land
+            # in this request's Timeline once the restore fully completes
+            gates.bind_timeline(tl)
         try:
             host.check_alive()
         except Exception:
@@ -104,7 +110,7 @@ class Agent:
             raise
         tl.t_exec_begin = self._now()
         try:
-            out = ex.run(tokens)
+            out = ex.run(tokens, timeline=tl)
         except Exception:
             # a crashed executor must never return to a pool — exit it so the
             # dispatcher's retry instantiates a FRESH one (stateless executors
@@ -141,6 +147,9 @@ class Agent:
         tl.t_start_begin = self._now()
         ex = self._claim_or_start(driver, dep, tl, preboot,
                                   bucket_rows=batch.padded_rows)
+        gates = getattr(ex, "gates", None)
+        if gates is not None:
+            gates.bind_timeline(tl)
         try:
             host.check_alive()
         except Exception:
@@ -151,7 +160,8 @@ class Agent:
             raise
         tl.t_exec_begin = self._now()
         try:
-            out = ex.run_batch(batch.tokens, valid_rows=batch.valid_rows)
+            out = ex.run_batch(batch.tokens, valid_rows=batch.valid_rows,
+                               timeline=tl)
         except Exception:
             # same rule as the unbatched path: a crashed executor never
             # returns to a pool; the dispatcher's retry re-dispatches the

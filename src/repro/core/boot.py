@@ -20,12 +20,25 @@ combined wall time in ``Timeline.t_boot_wall``, so the benchmarks can report a
 per-stage startup breakdown exactly like the paper's container-layer tables —
 and show the overlap win directly (wall < sum of stages).
 
+Streamed boots (``StreamRestore``/``FinalizeStream``, the ``unikernel_stream``
+driver) relax the all-at-once join: the weights track opens per-leaf
+readiness gates as leaves land on device (in the manifest's first-use order)
+and the JOIN stage may finalize a PARTIAL executor whose tail — remaining
+leaves, the tail/fused programs — completes on a background thread, patching
+the bound timelines (``restore_stream_tail_bg``, ``deserialize_program_bg``)
+when it settles. ``BootResult.t_first_ready`` stamps the moment the executor
+became dispatchable.
+
 Invariants: a weights-track stage never reads context fields a program-track
-stage writes (and vice versa) — cross-track products meet only at JOIN
-stages; cancellation lands at stage boundaries and a cancelled or failed boot
-disposes everything it materialized (no leaked executors or device memory);
-stage names are unique per plan, and a stage that rebinds its name records
-under the path that actually ran.
+stage writes (and vice versa) — cross-track products meet either at JOIN
+stages or through the readiness gates, which hand a finalized PARTIAL
+executor its tail exactly once (gate events are set-only, completion is
+monotonic); cancellation lands at stage boundaries AND per-chunk inside the
+streaming transfers (``streamed_device_put``/``stream_restore`` consult the
+boot's cancel event), and a cancelled or failed boot disposes everything it
+materialized (no leaked executors or device memory); stage names are unique
+per plan, and a stage that rebinds its name records under the path that
+actually ran.
 """
 from __future__ import annotations
 
@@ -37,7 +50,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
-from repro.core.executor import Executor
+from repro.core.executor import Executor, ReadinessGates, SplitServe
 from repro.core.metrics import Timeline, now
 
 
@@ -99,6 +112,12 @@ class BootContext:
         # only by the weights track; read by the engine after the tracks join.
         self.bytes_fetched: int = 0
         self.bytes_deduped: int = 0
+        # streamed-boot plumbing (set by the engine / StreamRestore):
+        self.cancel: Optional[threading.Event] = None   # the handle's cancel
+        self.t_begin: float = 0.0
+        self.gates: Optional[ReadinessGates] = None
+        self.stream: Any = None                         # _StreamState
+        self.split_program: bool = False                # head sub-program booted
 
 
 class Stage:
@@ -144,16 +163,23 @@ class FetchProgram(Stage):
     name = "fetch_program"
     track = TRACK_PROGRAM
 
+    # which artifact to fetch — FetchProgramHead points these at the AOT head
+    def _key(self, ctx: BootContext) -> str:
+        return ctx.dep.program_key(ctx.bucket_rows)
+
+    def _payload(self, ctx: BootContext) -> Optional[bytes]:
+        return ctx.dep.fetch_program_payload(ctx.bucket_rows)
+
     def run(self, ctx: BootContext) -> None:
         cache = getattr(ctx.host, "cache", None)
         if cache is None:
-            payload = ctx.dep.fetch_program_payload(ctx.bucket_rows)
+            payload = self._payload(ctx)
             if payload is None:                # deploy-verified in-process fallback
                 ctx.program = ctx.dep.load_program(ctx.bucket_rows)
             else:
                 ctx.program_payload = payload
             return
-        key = ctx.dep.program_key(ctx.bucket_rows)
+        key = self._key(ctx)
         entry = cache.get("program", key)
         if entry is not None:
             self.name = "fetch_program_cached"
@@ -164,7 +190,7 @@ class FetchProgram(Stage):
             self.name = "fetch_peer"
             self._consume(ctx, entry)
             return
-        payload = ctx.dep.fetch_program_payload(ctx.bucket_rows)
+        payload = self._payload(ctx)
         if payload is None:                    # deploy-verified in-process fallback
             ctx.program = ctx.dep.load_program(ctx.bucket_rows)
             return
@@ -180,6 +206,47 @@ class FetchProgram(Stage):
         else:
             ctx.program_payload = entry.payload
             ctx.program_entry = entry
+
+
+class FetchProgramHead(FetchProgram):
+    """Streamed-boot program fetch: the AOT *head* sub-program when a verified
+    split exists for this request shape, else exactly ``FetchProgram``.
+
+    Sets ``ctx.split_program`` so Finalize knows to wrap the head in a
+    ``SplitServe`` and to acquire the tail/fused programs in the background.
+    Any failure on the split path degrades to the fused program — the split
+    is a latency optimization, never a correctness dependency.
+    """
+
+    def __init__(self) -> None:
+        self._split = False
+
+    def _key(self, ctx: BootContext) -> str:
+        if self._split:
+            return ctx.dep.head_program_key()
+        return super()._key(ctx)
+
+    def _payload(self, ctx: BootContext) -> Optional[bytes]:
+        if self._split:
+            return ctx.dep.fetch_head_payload()
+        return super()._payload(ctx)
+
+    def run(self, ctx: BootContext) -> None:
+        dep = ctx.dep
+        self._split = bool(getattr(dep, "split_ok", False)) \
+            and ctx.bucket_rows in (None, dep.base_rows)
+        if not self._split:
+            super().run(ctx)
+            return
+        try:
+            super().run(ctx)
+        except Exception:
+            # degrade: forget any half-acquired head artifact, refetch fused
+            self._split = False
+            ctx.program = ctx.program_payload = ctx.program_entry = None
+            super().run(ctx)
+            return
+        ctx.split_program = True
 
 
 class DeserializeProgram(Stage):
@@ -277,7 +344,7 @@ class DevicePut(Stage):
 
     def run(self, ctx: BootContext) -> None:
         ctx.params = streamed_device_put(ctx.host_params, self.chunk_bytes,
-                                         self.prefetch)
+                                         self.prefetch, cancel=ctx.cancel)
         ctx.host_params = None
 
 
@@ -354,17 +421,235 @@ class Finalize(Stage):
                                 ctx.params, shared_weights=ctx.shared_weights)
 
 
+# ------------------------------------------------------------ streamed boot
+
+
+class _StreamState:
+    """Weights-stream handoff between StreamRestore and FinalizeStream."""
+
+    def __init__(self) -> None:
+        self.done = threading.Event()
+        self.abort = threading.Event()         # dispose: stop a failed boot's stream
+        self.error: Optional[BaseException] = None
+        self.device_tree: Any = None
+        self.bytes_fetched = 0
+        self.bytes_deduped = 0
+        self.bytes_recorded = False            # True once ctx took the byte counts
+        self.device_leaves: List[Any] = []
+
+
+class StreamRestore(Stage):
+    """Weights track of a streamed boot: restore + device_put leaves in
+    first-use order on a background thread, opening a readiness gate per leaf.
+
+    The stage itself returns once the deployment's *head* leaves are
+    device-resident (the head sub-program's read set — every leaf for the real
+    AOT split, a subset for synthetic programs); the remaining leaves keep
+    streaming on the ``bootengine-stream`` thread and FinalizeStream's
+    completion thread accounts them as ``restore_stream_tail_bg``. Works for
+    both formats: v2 chunked snapshots via ``blobstore.stream_restore``
+    (delta-aware: tier -> peer batch -> store), v1 ``.npy`` snapshots via
+    ``SnapshotStore.iter_restore``.
+    """
+
+    name = "restore_stream_head"
+    track = TRACK_WEIGHTS
+
+    def run(self, ctx: BootContext) -> None:
+        from repro.core.blobstore import RestoreAborted, stream_restore
+        from repro.core.snapshot import _rebuild_structure
+        dep = ctx.dep
+        key = dep.image.key
+        index = dep.snapshots.read_index(key)
+        entries = index["leaves"]
+        paths = [e["path"] for e in entries]
+        path_set = set(paths)
+        head = [p for p in getattr(dep, "head_leaves", ()) if p in path_set] \
+            or list(paths)
+        gates = ReadinessGates(paths, head)
+        ctx.gates = gates
+        state = _StreamState()
+        ctx.stream = state
+        cancel = ctx.cancel
+        chunked = dep.snapshots.blobs is not None and dep.snapshots.is_chunked(key)
+        cache = getattr(ctx.host, "cache", None)
+        device_leaves: List[Any] = [None] * len(entries)
+        state.device_leaves = device_leaves
+
+        def should_abort() -> bool:
+            return state.abort.is_set() or \
+                (cancel is not None and cancel.is_set())
+
+        def on_leaf(i: int, path: str, leaf) -> None:
+            device_leaves[i] = jax.device_put(leaf)
+            gates.mark_ready(path)
+
+        def worker() -> None:
+            try:
+                if chunked:
+                    _tree, stats = stream_restore(dep.snapshots, key, cache,
+                                                  on_leaf=on_leaf,
+                                                  should_abort=should_abort)
+                    state.bytes_fetched = stats.bytes_fetched
+                    state.bytes_deduped = stats.bytes_deduped
+                else:
+                    for i, path, leaf in dep.snapshots.iter_restore(key):
+                        if should_abort():
+                            raise RestoreAborted(key)
+                        on_leaf(i, path, leaf)
+                ready = jax.block_until_ready(device_leaves)
+                state.device_tree = _rebuild_structure(index["treedef"], ready)
+            except BaseException as e:  # noqa: BLE001 - relayed via gates
+                state.error = e
+                gates.fail(e)
+            finally:
+                state.done.set()
+
+        threading.Thread(target=worker, daemon=True,
+                         name="bootengine-stream").start()
+
+        if len(head) == len(paths):
+            # the head needs every leaf (the real AOT split): nothing to
+            # overlap with execution on the weights side — wait it out here
+            # so the stage time reflects the actual critical path
+            state.done.wait()
+        else:
+            try:
+                gates.wait_leaves(head)
+            except Exception:
+                state.done.wait()      # surface the stream's own error below
+        if state.error is not None:
+            if isinstance(state.error, (RestoreAborted, BootCancelled)):
+                raise BootCancelled(f"stream cancelled: {key}")
+            raise state.error
+        jax.block_until_ready([leaf for leaf in device_leaves
+                               if leaf is not None])
+        if state.done.is_set():
+            ctx.bytes_fetched += state.bytes_fetched
+            ctx.bytes_deduped += state.bytes_deduped
+            state.bytes_recorded = True
+
+
+def _acquire_program(cache, key: str,
+                     payload_fn: Callable[[], bytes]) -> Callable:
+    """Load an executable through the host program tier when one is attached
+    (tier hit may be pre-linked; misses park the loaded executable back on the
+    tier entry for the next boot), else deserialize the payload directly."""
+    from repro.core.compile_cache import CompileCache
+    if cache is not None:
+        entry = cache.get("program", key)
+        if entry is None:
+            entry = cache.fetch_from_peer("program", key)
+        if entry is not None:
+            if entry.loaded is None:
+                entry.loaded = CompileCache.deserialize_program(entry.payload)
+            return entry.loaded
+        from repro.core.scheduler import ProgramArtifact
+        payload = payload_fn()
+        entry = ProgramArtifact(payload)
+        cache.fetch_from_store("program", key, entry, entry.nbytes)
+        entry.loaded = CompileCache.deserialize_program(payload)
+        return entry.loaded
+    return CompileCache.deserialize_program(payload_fn())
+
+
+class FinalizeStream(Stage):
+    """Readiness-gated join: finalize a (possibly PARTIAL) streamed executor.
+
+    If the stream already delivered everything and the program track booted
+    the fused program, this is plain Finalize. Otherwise the executor starts
+    PARTIAL behind its gates and a ``bootengine-stream-complete`` thread
+    finishes the boot: wait out the weight tail, acquire the tail sub-program
+    (opening the SplitServe's tail gate) and the fused program (so a fully
+    restored executor is eager-equivalent — split serving is only the
+    cold-start bridge), swap them in via ``_complete_restore``, and patch
+    every bound timeline with the background stages and the extended wall.
+    """
+
+    name = "finalize"
+    track = TRACK_JOIN
+
+    def run(self, ctx: BootContext) -> None:
+        if ctx.executor is not None:
+            return
+        dep = ctx.dep
+        gates, state = ctx.gates, ctx.stream
+        assert gates is not None and state is not None, \
+            "FinalizeStream requires StreamRestore in the plan"
+        weights_done = state.done.is_set() and state.error is None
+        params = state.device_tree if weights_done else None
+        program: Callable = SplitServe(ctx.program, gates) \
+            if ctx.split_program else ctx.program
+        if weights_done and not ctx.split_program:
+            gates.mark_complete()              # nothing left: READY immediately
+            ctx.executor = Executor(dep.image.key, ctx.driver_name, program,
+                                    params, gates=gates)
+            return
+        ex = Executor(dep.image.key, ctx.driver_name, program, params,
+                      gates=gates)
+        ctx.executor = ex
+        host_cache = getattr(ctx.host, "cache", None)
+        split = ctx.split_program
+
+        def complete() -> None:
+            t0 = now()
+            try:
+                state.done.wait()
+                if state.error is not None:
+                    raise state.error
+                stage_extra: Dict[str, float] = {}
+                if not weights_done:
+                    stage_extra["restore_stream_tail_bg"] = now() - t0
+                new_params = None if weights_done else state.device_tree
+                fused = None
+                if split:
+                    t1 = now()
+                    tail_prog = _acquire_program(
+                        host_cache, dep.tail_program_key(),
+                        lambda: dep.cache.read_program_bytes(
+                            dep.tail_program_key()))
+                    gates.set_tail_program(tail_prog)
+                    # "fully restored" means eager-equivalent: the FUSED
+                    # program must be resident before we declare completion
+                    fused_payload = dep.fetch_program_payload(None)
+                    if fused_payload is None:
+                        fused = dep.load_program(None)
+                    else:
+                        fused = _acquire_program(host_cache, dep.image.key,
+                                                 lambda: fused_payload)
+                    stage_extra["deserialize_program_bg"] = now() - t1
+                ex._complete_restore(params=new_params, program=fused)
+                gates.mark_complete()
+                bf = bd = 0
+                if not state.bytes_recorded:
+                    bf, bd = state.bytes_fetched, state.bytes_deduped
+                    state.bytes_recorded = True
+                gates.finish_timelines(stage_extra, now() - t0,
+                                       bytes_fetched=bf, bytes_deduped=bd)
+            except BaseException as e:  # noqa: BLE001 - relayed via gates
+                gates.fail(e)
+
+        threading.Thread(target=complete, daemon=True,
+                         name="bootengine-stream-complete").start()
+
+
 # ----------------------------------------------------------- streamed put
 
 
 def streamed_device_put(host_tree: Any, chunk_bytes: int = 32 << 20,
-                        prefetch: int = 2) -> Any:
+                        prefetch: int = 2,
+                        cancel: Optional[threading.Event] = None) -> Any:
     """Chunked host->device transfer with read-ahead.
 
     Leaves are grouped into ~``chunk_bytes`` chunks; a producer thread forces
     each chunk's host bytes resident (``np.ascontiguousarray`` touches every
     mmap'd page) ``prefetch`` chunks ahead of the device_put consumer, so disk
     reads and PCIe/ICI transfers overlap instead of serializing.
+
+    ``cancel`` (a boot handle's cancel event) is consulted per chunk on BOTH
+    sides: the producer stops paging bytes in, the consumer stops issuing
+    device transfers and raises :class:`BootCancelled` — a cancelled
+    speculative pre-boot must not quietly complete the whole transfer.
     """
     leaves, treedef = jax.tree.flatten(host_tree)
     if not leaves:
@@ -396,6 +681,8 @@ def streamed_device_put(host_tree: Any, chunk_bytes: int = 32 << 20,
     def producer() -> None:
         try:
             for idxs in chunks:
+                if cancel is not None and cancel.is_set():
+                    return                         # cancelled: stop paging in
                 if not _put([(i, np.ascontiguousarray(leaves[i])) for i in idxs]):
                     return                         # drop refs, don't pin the tree
         except BaseException as e:  # noqa: BLE001 - relayed to consumer
@@ -412,6 +699,8 @@ def streamed_device_put(host_tree: Any, chunk_bytes: int = 32 << 20,
             item = q.get()
             if item is None:
                 break
+            if cancel is not None and cancel.is_set():
+                raise BootCancelled("cancelled mid device stream")
             for i, host_arr in item:
                 out[i] = jax.device_put(host_arr)  # async dispatch: overlaps
     finally:
@@ -448,12 +737,16 @@ class BootPlan:
 class BootResult:
     def __init__(self, executor: Executor, stage_s: Dict[str, float],
                  wall_s: float, bytes_fetched: int = 0,
-                 bytes_deduped: int = 0) -> None:
+                 bytes_deduped: int = 0, t_first_ready: float = 0.0) -> None:
         self.executor = executor
         self.stage_s = stage_s
         self.wall_s = wall_s
         self.bytes_fetched = bytes_fetched
         self.bytes_deduped = bytes_deduped
+        # when the executor became dispatchable (PARTIAL counts) — for a
+        # streamed boot this is the moment the head gates opened, while
+        # t_boot_wall keeps growing until the background tail settles
+        self.t_first_ready = t_first_ready
 
 
 class BootHandle:
@@ -528,7 +821,8 @@ class BootEngine:
                            bucket_rows=bucket_rows, host=host)
         tl.record_boot(result.stage_s, result.wall_s,
                        bytes_fetched=result.bytes_fetched,
-                       bytes_deduped=result.bytes_deduped)
+                       bytes_deduped=result.bytes_deduped,
+                       t_first_ready=result.t_first_ready)
         return result.executor
 
     def launch(self, plan: BootPlan, dep, driver_name: str,
@@ -557,6 +851,8 @@ class BootEngine:
         timing_lock = threading.Lock()
         errors: List[BaseException] = []
         t_begin = now()
+        ctx.cancel = cancel
+        ctx.t_begin = t_begin
 
         def run_track(stages: List[Stage]) -> None:
             try:
@@ -600,11 +896,14 @@ class BootEngine:
         assert ctx.executor is not None, f"plan built no executor: {plan}"
         return BootResult(ctx.executor, stage_s, now() - t_begin,
                           bytes_fetched=ctx.bytes_fetched,
-                          bytes_deduped=ctx.bytes_deduped)
+                          bytes_deduped=ctx.bytes_deduped,
+                          t_first_ready=now())
 
     @staticmethod
     def _dispose(ctx: BootContext) -> None:
         """Drop everything a failed/cancelled boot materialized."""
+        if ctx.stream is not None:
+            ctx.stream.abort.set()             # stop an in-flight weight stream
         if ctx.executor is not None and not ctx.shared_weights \
                 and ctx.executor.driver not in ("process", "fork-donor"):
             ctx.executor.exit()

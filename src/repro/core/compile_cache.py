@@ -33,6 +33,21 @@ from jax.experimental import serialize_executable as _se
 
 from repro.core.artifact import ImageManifest
 
+# Streamed boots split the serve program into an AOT head (prefill + first
+# token) and tail (the decode scan). The sub-programs live in the same cache
+# under derived keys — '#' can't appear in a FunctionSpec.cache_key, so the
+# derived keys never collide with a real image.
+HEAD_SUFFIX = "#head"
+TAIL_SUFFIX = "#tail"
+
+
+def head_key(key: str) -> str:
+    return key + HEAD_SUFFIX
+
+
+def tail_key(key: str) -> str:
+    return key + TAIL_SUFFIX
+
 
 class CompileCache:
     def __init__(self, root: str | Path) -> None:
@@ -53,6 +68,10 @@ class CompileCache:
     # -------------------------------------------------------------------- api
     def has(self, key: str) -> bool:
         return self.program_path(key).exists()
+
+    def has_split(self, key: str) -> bool:
+        """True when both head/tail sub-programs were published for ``key``."""
+        return self.has(head_key(key)) and self.has(tail_key(key))
 
     def put_compiled(self, key: str, compiled) -> int:
         """Serialize a jax.stages.Compiled; returns stored size in bytes."""

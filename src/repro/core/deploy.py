@@ -4,10 +4,13 @@
 ``deploy()`` turns a FunctionSpec into a ready Deployment:
   1. build the model and the single-purpose serve program (prefill + K greedy
      decode steps fused into ONE compiled callable — nothing generic),
-  2. AOT-compile and serialize it into the CompileCache,
-  3. write the weight snapshot (pre-laid-out; chunked v2 when the store has a
-     blob store attached) and the generic checkpoint (the slow-path
-     comparison),
+  2. AOT-compile and serialize it into the CompileCache — plus, for streamed
+     boots, the head/tail split of the same program (``make_head_fn`` /
+     ``make_tail_fn``), accepted only if bit-identical to the fused output,
+  3. run the one-time first-touch profiling pass (``first_use_order``) and
+     write the weight snapshot with the order persisted in its manifest
+     (pre-laid-out; chunked v2 when the store has a blob store attached),
+     plus the generic checkpoint (the slow-path comparison),
   4. record the ImageManifest.
 
 Invariants: every serialized image is verified by loading and running it once
@@ -22,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +33,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.artifact import ExecutorImage, FunctionSpec, ImageManifest
-from repro.core.compile_cache import CompileCache
+from repro.core.compile_cache import CompileCache, head_key, tail_key
 from repro.core.metrics import now
 from repro.core.snapshot import SnapshotStore, save_generic_checkpoint
 from repro.dist.sharding import abstract_state
@@ -58,6 +61,104 @@ def make_serve_fn(model: Model, spec: FunctionSpec) -> Callable:
     return serve
 
 
+def make_head_fn(model: Model, spec: FunctionSpec) -> Callable:
+    """Streamed-boot head: prefill + the FIRST response token.
+
+    The moment this sub-program's output is ready the response has begun —
+    that is the TTFR stamp. It also returns the prefill logits and KV cache
+    so the tail can resume the exact fused computation.
+    """
+    capacity = spec.prompt_len + spec.decode_steps
+
+    def head(params, tokens):
+        logits, cache = model.prefill(params, {"tokens": tokens}, capacity=capacity)
+        tok0 = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        return tok0, logits, cache
+
+    return head
+
+
+def make_tail_fn(model: Model, spec: FunctionSpec) -> Callable:
+    """Streamed-boot tail: the decode scan of ``make_serve_fn``, verbatim.
+
+    Takes the head's prefill logits + cache and re-derives token 0 inside the
+    scan exactly like the fused program does, so head+tail output is
+    bit-identical to the fused serve program (verified at deploy time).
+    """
+
+    def tail(params, logits, cache):
+        def step(carry, _):
+            lg, c = carry
+            tok = jnp.argmax(lg, axis=-1)[:, None].astype(jnp.int32)
+            lg2, c2 = model.decode(params, c, tok)
+            return (lg2, c2), tok[:, 0]
+
+        (_, _), toks = jax.lax.scan(step, (logits, cache), None,
+                                    length=spec.decode_steps)
+        return jnp.moveaxis(toks, 0, 1)                      # [B, decode_steps]
+
+    return tail
+
+
+def first_use_order(fn: Callable, abstract_params: Any, *abstract_args) -> List[str]:
+    """Trace ``fn`` once and return param-leaf paths in first-touch order.
+
+    A deploy-time-only profiling pass (no compile, no execution): the jaxpr's
+    equation list is a topological order that tracks trace order, so walking
+    the equations and recording when each param invar is first consumed gives
+    the order execution will first need each leaf — embedding and early layers
+    before late layers before the decode-only weights. Leaves the trace never
+    touches (dead params) are appended in ordinal order so the result is
+    always a permutation of every leaf path.
+
+    The walk descends into nested jaxprs (pjit/scan/cond carry params as
+    invars of inner jaxprs) when the inner signature matches 1:1; otherwise
+    the whole equation counts as the consumption point — coarse but safe.
+    """
+    closed = jax.make_jaxpr(fn)(abstract_params, *abstract_args)
+    flat, _ = jax.tree_util.tree_flatten_with_path(abstract_params)
+    paths = [jax.tree_util.keystr(p) for p, _ in flat]
+    n = len(paths)
+    # map jaxpr invars back to leaf ordinals by object identity — Var/Literal
+    # hashability differs across jax versions, id() does not
+    top_pos = {id(v): i for i, v in enumerate(closed.jaxpr.invars[:n])}
+    seen: List[int] = []
+    seen_set: set = set()
+
+    def visit(jaxpr, pos) -> None:
+        for eqn in jaxpr.eqns:
+            inner_jaxprs = []
+            for val in eqn.params.values():
+                vals = val if isinstance(val, (list, tuple)) else (val,)
+                for v in vals:
+                    # ClosedJaxpr forwards .eqns but not .invars — unwrap first
+                    if hasattr(v, "jaxpr") and hasattr(v.jaxpr, "eqns"):
+                        inner_jaxprs.append(v.jaxpr)
+                    elif hasattr(v, "eqns") and hasattr(v, "invars"):
+                        inner_jaxprs.append(v)
+            recursed = False
+            for inner in inner_jaxprs:
+                if len(inner.invars) != len(eqn.invars):
+                    continue
+                sub_pos = dict(pos)
+                for iv, ov in zip(inner.invars, eqn.invars):
+                    if id(ov) in pos:
+                        sub_pos[id(iv)] = pos[id(ov)]
+                visit(inner, sub_pos)
+                recursed = True
+            if recursed:
+                continue
+            for v in eqn.invars:
+                i = pos.get(id(v))
+                if i is not None and i not in seen_set:
+                    seen_set.add(i)
+                    seen.append(i)
+
+    visit(closed.jaxpr, top_pos)
+    order = seen + [i for i in range(n) if i not in seen_set]
+    return [paths[i] for i in order]
+
+
 @dataclasses.dataclass
 class Deployment:
     """Everything a driver needs to start executors for one function."""
@@ -75,6 +176,11 @@ class Deployment:
     fallback_program: Any = None   # set when deploy-time verification rejects the
                                    # serialized blob (XLA:CPU AOT loader can refuse
                                    # executables on feature-mismatched hosts)
+    # streamed-boot metadata (deploy-time profiling / split build):
+    first_use_order: List[str] = dataclasses.field(default_factory=list)
+    head_leaves: List[str] = dataclasses.field(default_factory=list)
+    split_ok: bool = False         # head/tail sub-programs published + verified
+                                   # bit-identical to the fused program
     # shape-bucket program registry (repro.core.batching): token-row count ->
     # in-process fallback program, or None when the serialized image is good.
     _buckets: Dict[int, Any] = dataclasses.field(default_factory=dict, repr=False)
@@ -149,6 +255,19 @@ class Deployment:
             return self.image.key
         return self.bucket_image_key(bucket_rows)
 
+    def head_program_key(self) -> str:
+        return head_key(self.image.key)
+
+    def tail_program_key(self) -> str:
+        return tail_key(self.image.key)
+
+    def fetch_head_payload(self) -> Optional[bytes]:
+        """Serialized head sub-program bytes, or None when no verified split
+        exists (the streamed boot then degrades to the fused program)."""
+        if not self.split_ok:
+            return None
+        return self.cache.read_program_bytes(self.head_program_key())
+
     def _program_fallback(self, bucket_rows: Optional[int]) -> Optional[Callable]:
         if bucket_rows is None or bucket_rows == self.base_rows:
             return self.fallback_program
@@ -191,19 +310,66 @@ def deploy(spec: FunctionSpec, cache: CompileCache, snapshots: SnapshotStore,
     # features differ from the host; a verified-bad image degrades to the
     # in-process program (flagged in the manifest) instead of crashing executors.
     fallback_program = None
+    probe_tokens = jnp.zeros((spec.batch_size, spec.prompt_len), jnp.int32)
     try:
         probe = cache.load_program(key)
-        jax.block_until_ready(probe(params, jnp.zeros(
-            (spec.batch_size, spec.prompt_len), jnp.int32)))
+        fused_out = jax.block_until_ready(probe(params, probe_tokens))
     except Exception:
         fallback_program = compiled
+        fused_out = jax.block_until_ready(compiled(params, probe_tokens))
+    fused_out = np.asarray(fused_out)
+
+    # 1b) split image for streamed boots: AOT head (prefill + first token) and
+    # tail (decode scan) published under derived keys, accepted only if their
+    # composed output is bit-identical to the fused program on a real probe.
+    split_ok = False
+    if fallback_program is None:
+        try:
+            head_c = jax.jit(make_head_fn(model, spec)).lower(
+                abstract_params, abstract_tokens).compile()
+            _tok0_s, logits_s, cache_s = jax.eval_shape(
+                make_head_fn(model, spec), abstract_params, abstract_tokens)
+            tail_c = jax.jit(make_tail_fn(model, spec)).lower(
+                abstract_params, logits_s, cache_s).compile()
+            cache.put_compiled(head_key(key), head_c)
+            cache.put_compiled(tail_key(key), tail_c)
+            head_p = cache.load_program(head_key(key))
+            tail_p = cache.load_program(tail_key(key))
+            tok0, logits, kv = head_p(params, probe_tokens)
+            split_out = np.asarray(
+                jax.block_until_ready(tail_p(params, logits, kv)))
+            tok0 = np.asarray(jax.block_until_ready(tok0))
+            split_ok = bool(np.array_equal(split_out, fused_out)
+                            and np.array_equal(tok0[:, 0], fused_out[:, 0]))
+        except Exception:
+            split_ok = False
+    if not split_ok:
+        cache.evict(head_key(key))
+        cache.evict(tail_key(key))
+
+    # 1c) one-time traced profiling pass: which leaf does execution touch
+    # first? Persisted into the snapshot manifest so restore streams leaves
+    # in first-use order (never needed for correctness — gates guarantee that)
+    try:
+        use_order = first_use_order(serve_fn, abstract_params, abstract_tokens)
+    except Exception:
+        use_order = []
+    flat_paths, _ = jax.tree_util.tree_flatten_with_path(abstract_params)
+    all_paths = [jax.tree_util.keystr(p) for p, _ in flat_paths]
+    # the AOT head's XLA signature consumes the whole params tree, so serving
+    # the first request needs every leaf device-resident; subset gating is
+    # exercised by synthetic (plain-callable) programs in tests
+    head_leaves = list(all_paths) if split_ok else []
+
     # 2) pre-laid-out snapshot + generic checkpoint comparison path
-    snapshot_bytes = snapshots.save(key, params)
+    snapshot_bytes = snapshots.save(key, params, first_use_order=use_order)
     generic_ckpt = f"{work_dir}/{key}_generic.npz"
     save_generic_checkpoint(generic_ckpt, params)
 
     build_seconds = now() - t_begin
-    extra: Dict[str, Any] = {"aot_verified": fallback_program is None}
+    extra: Dict[str, Any] = {"aot_verified": fallback_program is None,
+                             "split_serve": split_ok,
+                             "first_use_order_len": len(use_order)}
     if snapshots.blobs is not None:
         # chunked (v2) snapshot: record the manifest geometry so reports can
         # show dedup (unique chunk bytes in the store vs logical bytes)
@@ -225,4 +391,5 @@ def deploy(spec: FunctionSpec, cache: CompileCache, snapshots: SnapshotStore,
         cache=cache, snapshots=snapshots, generic_ckpt=generic_ckpt,
         abstract_params=abstract_params, abstract_tokens=abstract_tokens,
         build_seconds=build_seconds, fallback_program=fallback_program,
+        first_use_order=use_order, head_leaves=head_leaves, split_ok=split_ok,
     )

@@ -7,6 +7,7 @@ Ordered fastest -> slowest start, with their Sec II/III analogues:
 | process           | bare process (`/bin/date`)      | reuse the resident donor executor   |
 | fork              | fork()/clone(), solo5-spt       | alias donor weights (COW) + program |
 | unikernel         | IncludeOS-hvt  (the paper's bet)| AOT deserialize || snapshot->device |
+| unikernel_stream  | unikernel + lazy restore        | AOT head || first-use-ordered stream|
 | paused            | Fn paused containers/Firecracker| cached program + host RAM -> device |
 | warm              | warm Lambda / warm Fn-Docker    | pool checkout (no work, holds HBM)  |
 | cold_jit_cached   | gVisor/runc                     | re-trace + XLA disk-cache hit + ckpt|
@@ -41,10 +42,13 @@ from repro.core.boot import (
     DeserializeProgram,
     FetchParked,
     FetchProgram,
+    FetchProgramHead,
     Finalize,
+    FinalizeStream,
     PoolCheckout,
     RestoreWeightsHost,
     ReuseDonor,
+    StreamRestore,
     TraceCompile,
 )
 from repro.core.deploy import Deployment
@@ -100,6 +104,34 @@ class UnikernelDriver(Driver):
             FetchProgram(), DeserializeProgram(),            # program track
             RestoreWeightsHost("snapshot"), DevicePut(),     # weights track
             Finalize(),
+        ])
+
+
+class UnikernelStreamDriver(Driver):
+    """Streamed cold start: serve the first request before full restore.
+
+    Program track boots the AOT *head* sub-program (prefill + first token)
+    when the deployment published a verified split; the weights track streams
+    leaves to the device in first-use order behind per-leaf readiness gates
+    (``StreamRestore``), and ``FinalizeStream`` hands back a PARTIAL executor
+    whose tail — remaining leaves, tail/fused programs — completes in the
+    background while the request already executes. TTFR stops scaling with
+    image size; ``t_boot_wall`` keeps the honest full-restore accounting.
+
+    Unbatched on purpose: bucket programs have no published split, so a batch
+    boot would silently degrade to the fused path — route batches to the
+    plain ``unikernel`` driver instead.
+    """
+
+    name = "unikernel_stream"
+    supports_preboot = True
+    supports_batch = False
+
+    def plan(self, dep: Deployment) -> BootPlan:
+        return BootPlan([
+            FetchProgramHead(), DeserializeProgram(),        # program track
+            StreamRestore(),                                 # weights track
+            FinalizeStream(),
         ])
 
 
@@ -270,8 +302,8 @@ class ColdJITCachedDriver(ColdJITDriver):
     name = "cold_jit_cached"
 
 
-ALL_DRIVERS = ("process", "fork", "unikernel", "paused", "warm",
-               "cold_jit_cached", "cold_jit")
+ALL_DRIVERS = ("process", "fork", "unikernel", "unikernel_stream", "paused",
+               "warm", "cold_jit_cached", "cold_jit")
 
 
 def make_drivers(on_exit=None, host=None) -> Dict[str, Driver]:
@@ -279,6 +311,7 @@ def make_drivers(on_exit=None, host=None) -> Dict[str, Driver]:
         "process": ProcessDriver(on_exit=on_exit),
         "fork": ForkDriver(on_exit=on_exit),
         "unikernel": UnikernelDriver(),
+        "unikernel_stream": UnikernelStreamDriver(),
         "paused": PausedDriver(),
         "warm": WarmDriver(on_exit=on_exit),
         "cold_jit_cached": ColdJITCachedDriver(),

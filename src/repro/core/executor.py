@@ -2,24 +2,37 @@
 
 Life cycle mirrors the paper's executor units:
 
-    BUILDING -> READY -> RUNNING -> (READY | PAUSED | EXITED)
+    BUILDING -> (PARTIAL ->) READY -> RUNNING -> (READY | PARTIAL | PAUSED | EXITED)
 
 A *cold-only* platform drives every executor straight to EXITED after one request
 ("the unikernel simply exits, and, in parallel, the user gets back the result" —
 Sec IV-A); a *warm-pool* platform parks it READY (holding device memory) or PAUSED
 (host memory only), which is precisely the resource waste the paper eliminates.
 
+``PARTIAL`` is the streamed-restore state: the executor is dispatchable while
+its image is still arriving in the background. ``ReadinessGates`` carries one
+event per param leaf (in snapshot path order) plus a completion event;
+``run``/``run_batch`` block only until the leaves the program is about to
+touch are device-resident — a gate-aware program (``SplitServe``) waits on its
+head leaves and streams the rest behind execution, any other program waits for
+full completion. A streaming failure trips every gate and surfaces as a
+transient RuntimeError so the dispatcher's retry path re-dispatches and the
+request still settles exactly once.
+
 Invariants: ``exit`` is idempotent and drops the param references unless the
 weights are shared with a donor (``shared_weights`` — a fork clone must never
 free its donor's buffers); ``nbytes``/residency timers are stable after exit
 so accounting reads are race-free; params are treated as read-only by ``run``,
-which is what makes donor aliasing and assembled-tree memo sharing safe.
+which is what makes donor aliasing and assembled-tree memo sharing safe; a
+PARTIAL executor never exposes a partially-assembled tree — ``run`` re-reads
+``program``/``params`` under the lock after its gate wait, so it only ever
+sees the pre-completion or post-completion pair, never a mix.
 """
 from __future__ import annotations
 
 import enum
 import threading
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -29,10 +42,154 @@ from repro.core.metrics import now
 
 class ExecutorState(enum.Enum):
     BUILDING = "building"
+    PARTIAL = "partial"
     READY = "ready"
     RUNNING = "running"
     PAUSED = "paused"
     EXITED = "exited"
+
+
+class ReadinessGates:
+    """Per-leaf readiness events for a streamed restore, plus completion.
+
+    One ``threading.Event`` per leaf path: the restore stream sets a leaf's
+    event the moment its buffer is device-resident, ``mark_complete`` fires
+    once the whole tree (and any background program work) has landed, and
+    ``fail`` trips every event with a stored error so no waiter parks forever.
+    Waiting on a path the gates have never heard of degrades to waiting for
+    full completion — an unknown leaf must block, never read garbage.
+
+    The gates also patch boot accounting after the fact: timelines bound via
+    ``bind_timeline`` receive the background stages (``restore_stream_tail_bg``
+    etc.) when ``finish_timelines`` runs, whether they bound before or after
+    completion. Timelines live in the Recorder by reference, so benches see
+    the extended ``t_boot_wall`` once the tail settles.
+    """
+
+    _WAIT_S = 600.0          # backstop so a lost stream can't park a request
+
+    def __init__(self, paths: Iterable[str],
+                 head_paths: Sequence[str] = ()) -> None:
+        self._events: Dict[str, threading.Event] = {
+            p: threading.Event() for p in paths}
+        self.head_paths: Tuple[str, ...] = tuple(head_paths)
+        self._tail_program: Optional[Callable] = None
+        self._tail_event = threading.Event()
+        self._complete = threading.Event()
+        self._failure: Optional[BaseException] = None
+        self._lock = threading.Lock()
+        self._timelines: List[Any] = []
+        self._finish: Optional[Tuple[Dict[str, float], float, int, int]] = None
+
+    # -------------------------------------------------------------- producers
+    def mark_ready(self, path: str) -> None:
+        ev = self._events.get(path)
+        if ev is not None:
+            ev.set()
+
+    def set_tail_program(self, program: Callable) -> None:
+        self._tail_program = program
+        self._tail_event.set()
+
+    def mark_complete(self) -> None:
+        self._complete.set()
+
+    def fail(self, err: BaseException) -> None:
+        """Trip every gate with a stored error — waiters raise, none park."""
+        with self._lock:
+            if self._failure is None:
+                self._failure = err
+        for ev in self._events.values():
+            ev.set()
+        self._tail_event.set()
+        self._complete.set()
+
+    # -------------------------------------------------------------- consumers
+    def is_complete(self) -> bool:
+        return self._complete.is_set() and self._failure is None
+
+    def wait_complete(self, timeout: float = _WAIT_S) -> None:
+        if not self._complete.wait(timeout):
+            raise RuntimeError("streamed restore completion timed out")
+        self._raise_if_failed()
+
+    def wait_leaves(self, paths: Iterable[str],
+                    timeout: float = _WAIT_S) -> None:
+        for p in paths:
+            ev = self._events.get(p)
+            if ev is None:
+                # unknown leaf: only full completion proves it exists on device
+                self.wait_complete(timeout)
+                continue
+            if not ev.wait(timeout):
+                raise RuntimeError(f"streamed restore gate timed out: {p}")
+        self._raise_if_failed()
+
+    def wait_tail_program(self, timeout: float = _WAIT_S) -> Callable:
+        if not self._tail_event.wait(timeout):
+            raise RuntimeError("streamed restore tail program timed out")
+        self._raise_if_failed()
+        assert self._tail_program is not None
+        return self._tail_program
+
+    def _raise_if_failed(self) -> None:
+        if self._failure is not None:
+            # phrased so dispatcher._is_transient classifies it retryable:
+            # the re-dispatch boots fresh (store fallback) and the request
+            # still settles exactly once
+            raise RuntimeError(
+                "streamed restore failed: required chunks not found "
+                f"({self._failure!r})")
+
+    # ------------------------------------------------------- boot accounting
+    def bind_timeline(self, tl) -> None:
+        """Attach a request timeline; it receives the background-stage patch
+        immediately if the tail already finished, or when it does."""
+        with self._lock:
+            fin = self._finish
+            if fin is None:
+                self._timelines.append(tl)
+                return
+        stage_s, wall_extra, bf, bd = fin
+        tl.record_boot(stage_s, wall_extra, bytes_fetched=bf, bytes_deduped=bd)
+
+    def finish_timelines(self, stage_s: Dict[str, float], wall_extra: float,
+                         bytes_fetched: int = 0, bytes_deduped: int = 0) -> None:
+        with self._lock:
+            self._finish = (dict(stage_s), float(wall_extra),
+                            int(bytes_fetched), int(bytes_deduped))
+            tls = list(self._timelines)
+            self._timelines.clear()
+        for tl in tls:
+            tl.record_boot(stage_s, wall_extra, bytes_fetched=bytes_fetched,
+                           bytes_deduped=bytes_deduped)
+
+
+class SplitServe:
+    """Gate-aware program: AOT head now, AOT tail when its program lands.
+
+    ``head(params, tokens)`` is the prefill + first-token sub-program — the
+    moment its output is ready the response has begun (``t_ttfr``). The tail
+    (the decode scan, re-deriving token 0 from the prefill logits so outputs
+    are bit-identical to the fused program) waits on the background program
+    track. ``gate_aware`` tells ``Executor.run`` to pass the timeline through
+    instead of parking on full completion.
+    """
+
+    gate_aware = True
+
+    def __init__(self, head: Callable, gates: ReadinessGates) -> None:
+        self.head = head
+        self.gates = gates
+
+    def __call__(self, params, tokens, timeline=None):
+        self.gates.wait_leaves(self.gates.head_paths)
+        tok0, logits, kv = self.head(params, tokens)
+        tok0 = jax.block_until_ready(tok0)
+        if timeline is not None and not timeline.t_ttfr:
+            timeline.t_ttfr = now()
+        tail = self.gates.wait_tail_program()
+        return tail(params, logits, kv)
 
 
 # Every executor for a given image carries an identical param tree, but on a
@@ -63,7 +220,8 @@ class Executor:
     _counter_lock = threading.Lock()
 
     def __init__(self, image_key: str, driver: str, program: Callable, params: Any,
-                 shared_weights: bool = False) -> None:
+                 shared_weights: bool = False,
+                 gates: Optional[ReadinessGates] = None) -> None:
         with Executor._counter_lock:
             Executor._counter += 1
             self.eid = Executor._counter
@@ -72,31 +230,83 @@ class Executor:
         self.program = program
         self.params = params
         self.shared_weights = shared_weights     # fork: weights aliased from a donor
-        self.nbytes = 0 if shared_weights else tree_nbytes(params, cache_key=image_key)
-        self.state = ExecutorState.READY
+        self.gates = gates
+        # params may still be streaming in (None until completion) — never
+        # memoize a size for a tree we don't hold yet, or the 0 would poison
+        # the per-image cache for every later eager executor of this image
+        if shared_weights or params is None:
+            self.nbytes = 0
+        else:
+            self.nbytes = tree_nbytes(params, cache_key=image_key)
+        if gates is not None and not gates.is_complete():
+            self.state = ExecutorState.PARTIAL
+        else:
+            self.state = ExecutorState.READY
         self.t_created = now()
         self.t_exited: Optional[float] = None
         self.busy_seconds = 0.0
         self._lock = threading.Lock()
 
-    # ---------------------------------------------------------------- running
-    def run(self, *args) -> Any:
+    def _complete_restore(self, params: Any = None,
+                          program: Optional[Callable] = None) -> None:
+        """Background-completion handoff: swap in the fully-restored tree
+        and/or the fused program, then promote PARTIAL -> READY."""
         with self._lock:
-            if self.state not in (ExecutorState.READY, ExecutorState.RUNNING):
+            if self.state is ExecutorState.EXITED:
+                return
+            if params is not None:
+                self.params = params
+                if not self.shared_weights:
+                    self.nbytes = tree_nbytes(params, cache_key=self.image_key)
+            if program is not None:
+                self.program = program
+            if self.state is ExecutorState.PARTIAL:
+                self.state = ExecutorState.READY
+
+    # ---------------------------------------------------------------- running
+    def run(self, *args, timeline=None) -> Any:
+        with self._lock:
+            runnable = (ExecutorState.READY, ExecutorState.RUNNING,
+                        ExecutorState.PARTIAL)
+            if self.state not in runnable:
                 raise RuntimeError(f"executor {self.eid} not runnable: {self.state}")
+            was_partial = self.state is ExecutorState.PARTIAL
             self.state = ExecutorState.RUNNING
+            program = self.program
+        if was_partial and self.gates is not None \
+                and not getattr(program, "gate_aware", False):
+            # plain program on a streaming executor: the full tree is the
+            # read set, so the request parks until the restore completes
+            # (raising the gates' stored error if the stream died)
+            try:
+                self.gates.wait_complete()
+            except BaseException:
+                with self._lock:
+                    if self.state is ExecutorState.RUNNING:
+                        self.state = ExecutorState.PARTIAL
+                raise
+            with self._lock:
+                program = self.program
         t0 = now()
         try:
-            out = self.program(self.params, *args)
+            if getattr(program, "gate_aware", False):
+                out = program(self.params, *args, timeline=timeline)
+            else:
+                out = program(self.params, *args)
             out = jax.block_until_ready(out)
+            if timeline is not None and not timeline.t_ttfr:
+                timeline.t_ttfr = now()
         finally:
             with self._lock:
                 self.busy_seconds += now() - t0
                 if self.state is ExecutorState.RUNNING:
-                    self.state = ExecutorState.READY
+                    done = self.gates is None or self.gates.is_complete()
+                    self.state = ExecutorState.READY if done \
+                        else ExecutorState.PARTIAL
         return out
 
-    def run_batch(self, tokens, valid_rows: Optional[int] = None) -> np.ndarray:
+    def run_batch(self, tokens, valid_rows: Optional[int] = None,
+                  timeline=None) -> np.ndarray:
         """Run a padded coalesced batch and drop the padding rows.
 
         The executor's program was compiled for the batch's bucket shape; the
@@ -105,7 +315,7 @@ class Executor:
         independent (attention is within-sequence), so padding rows cannot
         contaminate real ones and are simply discarded here.
         """
-        out = np.asarray(self.run(tokens))
+        out = np.asarray(self.run(tokens, timeline=timeline))
         if valid_rows is not None:
             out = out[:valid_rows]
         return out

@@ -45,9 +45,11 @@ class Gateway:
                  hedging: bool = True, speculative: bool = False,
                  batching: Union[bool, BatchingConfig] = False,
                  scheduler: Optional[SchedulerConfig] = None,
-                 clock: Optional[Clock] = None) -> None:
+                 clock: Optional[Clock] = None,
+                 default_driver: Optional[str] = None) -> None:
         assert mode in ("cold", "warm")
         self.mode = mode
+        self._default_driver = default_driver
         self.work_dir = work_dir or tempfile.mkdtemp(prefix="repro_faas_")
         Path(self.work_dir).mkdir(parents=True, exist_ok=True)
         self.cache = CompileCache(Path(self.work_dir) / "images")
@@ -98,6 +100,8 @@ class Gateway:
 
     # ------------------------------------------------------------------ invoke
     def default_driver(self) -> str:
+        if self._default_driver is not None:
+            return self._default_driver
         return "unikernel" if self.mode == "cold" else "warm"
 
     def invoke_async(self, fn_name: str, tokens: Optional[np.ndarray] = None,

@@ -164,10 +164,12 @@ class Series:
 # the tiered-cache variants record which source actually served the bytes),
 # "weights" = materialize weights on the device (host restore + device_put).
 PROGRAM_STAGES = ("fetch_program", "fetch_program_cached", "fetch_peer",
-                  "deserialize_program", "trace_compile", "fetch_parked")
+                  "deserialize_program", "deserialize_program_bg",
+                  "trace_compile", "fetch_parked")
 WEIGHT_STAGES = ("restore_weights_host", "restore_weights_cached",
                  "restore_weights_peer", "restore_delta", "fetch_chunks_peer",
-                 "fetch_chunks_store", "device_put", "alias_donor")
+                 "fetch_chunks_store", "device_put", "alias_donor",
+                 "restore_stream_head", "restore_stream_tail_bg")
 
 
 @dataclasses.dataclass
@@ -185,6 +187,13 @@ class Timeline:
     # than sum(stage_s.values()) — that gap is the overlap win.
     stage_s: Dict[str, float] = dataclasses.field(default_factory=dict)
     t_boot_wall: float = 0.0
+    # streaming-restore stamps (absolute, monotonic clock; 0.0 = not stamped):
+    # t_first_ready = the executor could first accept a request (PARTIAL counts
+    # — its head gates were open), t_ttfr = the first response token of this
+    # request's execution existed. For an eager boot both coincide with full
+    # restore; for a streamed boot they land while the tail is still moving.
+    t_first_ready: float = 0.0
+    t_ttfr: float = 0.0
     preboot: bool = False            # boot ran speculatively while queued
     # coalescing: how many requests shared this executor's boot (1 = unbatched).
     # Member timelines of one batch share every stamp except t_enqueue, so
@@ -198,11 +207,14 @@ class Timeline:
 
     def record_boot(self, stage_s: Dict[str, float], wall_s: float,
                     bytes_fetched: float = 0.0,
-                    bytes_deduped: float = 0.0) -> None:
+                    bytes_deduped: float = 0.0,
+                    t_first_ready: float = 0.0) -> None:
         self.stage_s.update(stage_s)
         self.t_boot_wall += wall_s
         self.bytes_fetched += bytes_fetched
         self.bytes_deduped += bytes_deduped
+        if t_first_ready:
+            self.t_first_ready = t_first_ready
 
     @property
     def t_program(self) -> float:
@@ -230,6 +242,18 @@ class Timeline:
     def boots_share(self) -> float:
         """This request's share of one executor boot (1/batch_size)."""
         return 1.0 / max(self.batch_size, 1)
+
+    @property
+    def ttfr(self) -> float:
+        """Time-to-first-response: executor start to first response token.
+
+        Boot-relative on purpose (same origin as ``t_boot_wall``) so the
+        streamed-vs-eager comparison is between commensurate quantities;
+        0.0 when the boot path never stamped ``t_ttfr`` (warm/batch paths).
+        """
+        if not self.t_ttfr:
+            return 0.0
+        return self.t_ttfr - self.t_start_begin
 
     @property
     def queue_wait(self) -> float:

@@ -25,6 +25,12 @@ always attaches one):
     becomes a DELTA restore (repro.core.blobstore.delta_restore): only the
     chunks the host doesn't already hold move over the wire.
 
+    v2.1 adds an optional ``first_use_order`` list (leaf paths in execution
+    first-touch order, from deploy-time profiling): ``leaf_order`` /
+    ``iter_restore`` / ``assemble_tree`` fetch leaves in that order so a
+    streamed restore makes the head of the model runnable first. Advisory
+    only — v2.0 readers ignore it, and leaves always land at their ordinal.
+
 Invariants: ``save`` publishes atomically (a reader never sees a partial
 snapshot); v2 chunk refcounts are balanced — one incref per unique chunk per
 save, one decref per evict/overwrite — so shared chunks outlive any single
@@ -118,7 +124,8 @@ class SnapshotStore:
         return self.has(name) and self.read_index(name).get("format") == 2
 
     # ------------------------------------------------------------------- save
-    def save(self, name: str, params) -> int:
+    def save(self, name: str, params,
+             first_use_order: List[str] | None = None) -> int:
         """Write a snapshot atomically; returns total stored bytes.
 
         With a blob store attached this writes the v2 format: each leaf's raw
@@ -126,15 +133,22 @@ class SnapshotStore:
         unique content across ALL snapshots), and an index.json that is pure
         metadata — the chunk manifest a delta restore diffs against a host's
         chunk tier.
+
+        ``first_use_order`` (leaf paths in execution first-touch order, from
+        deploy-time profiling) is persisted into the index so restores can
+        stream leaves in the order execution will need them (manifest v2.1;
+        purely advisory — readers without it fall back to ordinal order).
         """
         if self.blobs is not None:
-            return self._save_v2(name, params)
+            return self._save_v2(name, params, first_use_order=first_use_order)
         items, treedef = _flatten_with_paths(params)
         d = self._dir(name)
         tmp = d.with_name(d.name + ".tmp")
         shutil.rmtree(tmp, ignore_errors=True)
         tmp.mkdir(parents=True)
-        index = {"leaves": [], "treedef": None}
+        index: Dict[str, Any] = {"leaves": [], "treedef": None}
+        if first_use_order:
+            index["first_use_order"] = list(first_use_order)
         total = 0
         for i, (path, leaf) in enumerate(items):
             arr = np.asarray(leaf)
@@ -156,12 +170,16 @@ class SnapshotStore:
             self._index_cache[name] = index
         return total
 
-    def _save_v2(self, name: str, params) -> int:
+    def _save_v2(self, name: str, params,
+                 first_use_order: List[str] | None = None) -> int:
         from repro.core.blobstore import split_chunks
         items, treedef = _flatten_with_paths(params)
         chunk_bytes = self.blobs.chunk_bytes
         index: Dict[str, Any] = {"format": 2, "chunk_bytes": chunk_bytes,
                                  "leaves": [], "treedef": None}
+        if first_use_order:
+            index["version"] = "2.1"
+            index["first_use_order"] = list(first_use_order)
         raws: List[Tuple[str, Any, str, str, bytes]] = []
         for path, leaf in items:
             arr = np.asarray(leaf)
@@ -229,6 +247,22 @@ class SnapshotStore:
         return [c for e in self.read_index(name)["leaves"] for c in e["chunks"]]
 
     @staticmethod
+    def leaf_order(index: Dict[str, Any]) -> List[int]:
+        """Leaf ordinals in restore order: the manifest's ``first_use_order``
+        where present (paths the manifest doesn't know are skipped; leaves the
+        order doesn't cover are appended in ordinal order), else identity.
+        Always a permutation of ``range(len(leaves))``."""
+        order = index.get("first_use_order")
+        n = len(index["leaves"])
+        if not order:
+            return list(range(n))
+        by_path = {e["path"]: i for i, e in enumerate(index["leaves"])}
+        out = [by_path[p] for p in order if p in by_path]
+        covered = set(out)
+        out.extend(i for i in range(n) if i not in covered)
+        return out
+
+    @staticmethod
     def _leaf_from_chunks(entry: Dict[str, Any],
                           chunk_bytes: Callable[[str], bytes]) -> np.ndarray:
         raw = b"".join(chunk_bytes(cid) for cid in entry["chunks"])
@@ -236,13 +270,40 @@ class SnapshotStore:
         return _from_storable(stored, entry["dtype"]).reshape(entry["shape"])
 
     def assemble_tree(self, index: Dict[str, Any],
-                      chunk_bytes: Callable[[str], bytes]) -> Any:
+                      chunk_bytes: Callable[[str], bytes],
+                      order: List[int] | None = None) -> Any:
         """Rebuild the host tree of a v2 index from a chunk-byte source —
         the delta restore's final step (``chunk_bytes`` may serve any mix of
-        tier-resident, peer-fetched, and store-fetched chunks)."""
-        leaves = [self._leaf_from_chunks(e, chunk_bytes)
-                  for e in index["leaves"]]
+        tier-resident, peer-fetched, and store-fetched chunks). ``order``
+        (leaf ordinals, e.g. ``leaf_order(index)``) controls FETCH order only;
+        leaves land at their ordinal position either way."""
+        entries = index["leaves"]
+        if order is None:
+            order = self.leaf_order(index)
+        leaves: List[Any] = [None] * len(entries)
+        for i in order:
+            leaves[i] = self._leaf_from_chunks(entries[i], chunk_bytes)
         return _rebuild_structure(index["treedef"], leaves)
+
+    def iter_restore(self, name: str, mmap: bool = True):
+        """Yield ``(ordinal, path, host_leaf)`` in first-use order, both
+        formats — the streamed restore's producer. v2 assembles each leaf
+        from the global chunk store as it's reached; v1 opens one .npy at a
+        time (mmap'd by default). Unlike ``iter_host_leaves`` the iteration
+        order follows the manifest's ``first_use_order`` when present."""
+        d = self._dir(name)
+        index = self.read_index(name)
+        entries = index["leaves"]
+        chunked = index.get("format") == 2
+        for i in self.leaf_order(index):
+            e = entries[i]
+            if chunked:
+                leaf = self._leaf_from_chunks(e, self.blobs.get)
+            else:
+                leaf = _from_storable(
+                    np.load(d / e["file"], mmap_mode="r" if mmap else None),
+                    e["dtype"])
+            yield i, e["path"], leaf
 
     def iter_host_leaves(self, name: str, mmap: bool = True):
         """Yield host leaves one at a time, in ordinal order.

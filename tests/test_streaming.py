@@ -1,0 +1,371 @@
+"""First-use-ordered streamed restore: readiness gates, PARTIAL executors,
+fault paths (failed streams settle exactly once), and cancel hygiene."""
+import threading
+import time
+import types
+
+import jax
+import numpy as np
+import pytest
+
+import repro.core.blobstore as blobstore_mod
+from repro.core.blobstore import ChunkStore
+from repro.core.boot import (
+    ENGINE,
+    BootCancelled,
+    BootPlan,
+    FinalizeStream,
+    Stage,
+    StreamRestore,
+    TRACK_PROGRAM,
+    streamed_device_put,
+)
+from repro.core.dispatcher import _is_transient
+from repro.core.executor import ExecutorState, ReadinessGates
+from repro.core.metrics import Timeline
+from repro.core.snapshot import SnapshotStore
+
+
+# --------------------------------------------------------------- gate units
+
+
+def _paths():
+    return ["['a']", "['b']", "['c']"]
+
+
+def test_gates_subset_wait_returns_before_completion():
+    gates = ReadinessGates(_paths(), head_paths=["['a']"])
+    gates.mark_ready("['a']")
+    gates.wait_leaves(["['a']"], timeout=1)      # returns: head is resident
+    assert not gates.is_complete()
+
+
+def test_gates_unknown_leaf_blocks_until_completion():
+    """A leaf the stream never announced must block (only full completion
+    proves it exists on device) — never read garbage."""
+    gates = ReadinessGates(_paths())
+    with pytest.raises(RuntimeError, match="completion timed out"):
+        gates.wait_leaves(["['zzz']"], timeout=0.1)
+    gates.mark_complete()
+    gates.wait_leaves(["['zzz']"], timeout=1)    # completion opens everything
+
+
+def test_gates_failure_is_transient_for_the_dispatcher():
+    """A dead stream trips every gate with an error the dispatcher classifies
+    as retryable — the retry boots fresh and the request settles exactly once."""
+    gates = ReadinessGates(_paths(), head_paths=["['a']"])
+    gates.fail(IOError("peer withdrew chunk deadbeef"))
+    for waiter in (lambda: gates.wait_leaves(["['a']"], timeout=1),
+                   lambda: gates.wait_complete(timeout=1),
+                   lambda: gates.wait_tail_program(timeout=1)):
+        with pytest.raises(RuntimeError) as exc_info:
+            waiter()
+        assert _is_transient(exc_info.value)
+    assert not gates.is_complete()               # failed != complete
+
+
+def test_gates_patch_timelines_bound_before_and_after_finish():
+    gates = ReadinessGates(_paths())
+    early = Timeline()
+    gates.bind_timeline(early)                   # bound while tail in flight
+    gates.finish_timelines({"restore_stream_tail_bg": 0.5}, 0.5,
+                           bytes_fetched=128)
+    late = Timeline()
+    gates.bind_timeline(late)                    # bound after the tail landed
+    for tl in (early, late):
+        assert tl.stage_s["restore_stream_tail_bg"] == 0.5
+        assert tl.t_boot_wall == 0.5
+        assert tl.bytes_fetched == 128
+
+
+# ------------------------------------------------- synthetic streamed boots
+
+
+def _serve(params, tokens):
+    return params["a"] * 2.0 + params["b"].sum() + params["c"].sum() + tokens
+
+
+class _SetProgram(Stage):
+    name, track = "deserialize_program", TRACK_PROGRAM
+
+    def run(self, ctx):
+        ctx.program = _serve
+
+
+def _stream_dep(tmp_path, chunked=True, head=None, order=None):
+    """A minimal Deployment stand-in with a real snapshot on disk."""
+    if chunked:
+        snaps = SnapshotStore(tmp_path / "snaps",
+                              blobs=ChunkStore(tmp_path / "blobs"))
+    else:
+        snaps = SnapshotStore(tmp_path / "snaps")
+    rng = np.random.default_rng(3)
+    # integer-valued floats: exact under any summation order (numpy vs jax)
+    params = {"a": rng.integers(-4, 5, size=(4, 4)).astype(np.float32),
+              "b": rng.integers(-4, 5, size=(8,)).astype(np.float32),
+              "c": rng.integers(-4, 5, size=(2, 3)).astype(np.float32)}
+    key = f"img-stream-{'v2' if chunked else 'v1'}-{tmp_path.name}"
+    snaps.save(key, params, first_use_order=order)
+    dep = types.SimpleNamespace(
+        image=types.SimpleNamespace(key=key), snapshots=snaps,
+        head_leaves=list(head or []))
+    return dep, params
+
+
+def _stream_plan():
+    return BootPlan([_SetProgram(), StreamRestore(), FinalizeStream()])
+
+
+@pytest.mark.parametrize("chunked", [True, False])
+def test_streamed_restore_matches_eager_both_formats(tmp_path, chunked):
+    """First-use-ordered streaming is numerically identical to an eager
+    restore, for v2 chunked manifests and v1 .npy snapshots alike."""
+    order = ["['b']", "['c']", "['a']"]           # non-ordinal on purpose
+    dep, params = _stream_dep(tmp_path, chunked=chunked, order=order)
+    tokens = np.arange(16, dtype=np.float32).reshape(4, 4)
+    tl = Timeline()
+    ex = ENGINE.execute(_stream_plan(), dep, tl, driver_name="t")
+    out = np.asarray(ex.run(tokens, timeline=tl))
+    np.testing.assert_array_equal(out, np.asarray(_serve(params, tokens)))
+    assert "restore_stream_head" in tl.stage_s
+    assert tl.t_first_ready > 0.0
+    assert tl.t_ttfr > 0.0
+    ex.exit()
+
+
+def test_partial_executor_gates_requests_until_the_tail_lands(tmp_path):
+    """A request issued BEFORE the tail finishes blocks on the gates (never
+    reads a partially-assembled tree) and still returns the eager answer;
+    the bound timeline then grows the background stages and extended wall."""
+    dep, params = _stream_dep(tmp_path, chunked=True, head=["['a']"],
+                              order=["['a']", "['b']", "['c']"])
+    release = threading.Event()
+    real_get = ChunkStore.get
+    b_cids = {c for e in dep.snapshots.read_index(dep.image.key)["leaves"]
+              if e["path"] == "['b']" for c in e["chunks"]}
+
+    def stalling_get(self, cid):
+        if cid in b_cids:                         # stall the tail mid-stream
+            assert release.wait(30)
+        return real_get(self, cid)
+
+    tokens = np.zeros((4, 4), np.float32)
+    tl = Timeline()
+    try:
+        ChunkStore.get = stalling_get
+        ex = ENGINE.execute(_stream_plan(), dep, tl, driver_name="t")
+        assert ex.state is ExecutorState.PARTIAL  # dispatchable before done
+        assert tl.t_first_ready > 0.0
+        wall_at_head = tl.t_boot_wall
+        ex.gates.bind_timeline(tl)
+        done = threading.Event()
+        out_box = []
+
+        def request():
+            out_box.append(np.asarray(ex.run(tokens, timeline=tl)))
+            done.set()
+
+        threading.Thread(target=request, daemon=True).start()
+        assert not done.wait(0.3)                 # gated: tail still streaming
+    finally:
+        ChunkStore.get = real_get
+        release.set()
+    assert done.wait(30)
+    np.testing.assert_array_equal(out_box[0],
+                                  np.asarray(_serve(params, tokens)))
+    ex.gates.wait_complete(30)
+    assert ex.state is ExecutorState.READY
+    assert tl.stage_s["restore_stream_tail_bg"] > 0.0
+    assert tl.t_boot_wall > wall_at_head          # honest full-restore wall
+    ex.exit()
+
+
+def test_stream_store_error_fails_gates_and_retries_settle_once(tmp_path):
+    """A chunk fetch that dies mid-stream (store error / withdrawn peer) trips
+    the gates: the PARTIAL executor's request raises the transient error (so
+    the dispatcher re-dispatches) and a fresh boot serves the retry."""
+    dep, params = _stream_dep(tmp_path, chunked=True, head=["['a']"],
+                              order=["['a']", "['b']", "['c']"])
+    real_get = ChunkStore.get
+    b_cids = {c for e in dep.snapshots.read_index(dep.image.key)["leaves"]
+              if e["path"] == "['b']" for c in e["chunks"]}
+    fail = threading.Event()
+    fail.set()
+    proceed = threading.Event()                   # holds the failure until the
+                                                  # boot has gone PARTIAL
+
+    def failing_get(self, cid):
+        if fail.is_set() and cid in b_cids:
+            assert proceed.wait(30)
+            raise KeyError(f"chunk {cid} gone")
+        return real_get(self, cid)
+
+    tokens = np.zeros((4, 4), np.float32)
+    try:
+        ChunkStore.get = failing_get
+        tl = Timeline()
+        ex = ENGINE.execute(_stream_plan(), dep, tl, driver_name="t")
+        assert ex.state is ExecutorState.PARTIAL
+        proceed.set()
+        with pytest.raises(RuntimeError) as exc_info:
+            ex.run(tokens, timeline=tl)
+        assert _is_transient(exc_info.value)
+        assert ex.state is ExecutorState.PARTIAL  # crashed, never READY
+        ex.exit()
+        fail.clear()                              # "store recovered": retry path
+        tl2 = Timeline()
+        ex2 = ENGINE.execute(_stream_plan(), dep, tl2, driver_name="t")
+        out = np.asarray(ex2.run(tokens, timeline=tl2))
+    finally:
+        ChunkStore.get = real_get
+    np.testing.assert_array_equal(out, np.asarray(_serve(params, tokens)))
+    ex2.exit()
+
+
+def test_head_covering_all_leaves_boots_ready_not_partial(tmp_path):
+    """When the head's read set is every leaf (the real AOT split), the stage
+    waits the stream out and the executor is READY — no gate left to hit."""
+    dep, params = _stream_dep(tmp_path, chunked=True)    # head_leaves = []
+    tl = Timeline()
+    ex = ENGINE.execute(_stream_plan(), dep, tl, driver_name="t")
+    assert ex.state is ExecutorState.READY
+    assert ex.gates.is_complete()
+    tokens = np.ones((4, 4), np.float32)
+    out = np.asarray(ex.run(tokens, timeline=tl))
+    np.testing.assert_array_equal(out, np.asarray(_serve(params, tokens)))
+    ex.exit()
+
+
+def test_preboot_cancel_mid_stream_stops_transfers_and_leaks_nothing(tmp_path):
+    """Satellite regression: cancelling a speculative streamed boot stops the
+    chunk stream promptly and leaves no live executor behind."""
+    dep, _params = _stream_dep(tmp_path, chunked=True, head=["['a']"],
+                               order=["['a']", "['b']", "['c']"])
+    stalled = threading.Event()
+    release = threading.Event()
+    real_get = ChunkStore.get
+    b_cids = {c for e in dep.snapshots.read_index(dep.image.key)["leaves"]
+              if e["path"] == "['b']" for c in e["chunks"]}
+
+    def stalling_get(self, cid):
+        if cid in b_cids:
+            stalled.set()
+            assert release.wait(30)
+        return real_get(self, cid)
+
+    try:
+        ChunkStore.get = stalling_get
+        handle = ENGINE.launch(_stream_plan(), dep, driver_name="t")
+        assert stalled.wait(30)                   # stream is mid-flight
+        handle.cancel()
+        release.set()
+        deadline = time.time() + 30
+        while not handle.done() and time.time() < deadline:
+            time.sleep(0.01)
+        assert handle.done()
+        with pytest.raises(BootCancelled):
+            handle.claim(timeout=1)
+        if handle._result is not None:
+            assert handle._result.executor.state is ExecutorState.EXITED
+    finally:
+        ChunkStore.get = real_get
+        release.set()
+    time.sleep(0.2)
+    lingering = [t for t in threading.enumerate()
+                 if t.name.startswith("bootengine-stream") and t.is_alive()]
+    assert not lingering, lingering
+
+
+def test_streamed_device_put_cancel_mid_stream_stops_promptly():
+    """Satellite bugfix: the boot's cancel event is consulted per CHUNK inside
+    streamed_device_put — setting it mid-transfer raises BootCancelled and the
+    remaining chunks are never shipped to the device."""
+    tree = {f"leaf{i:02d}": np.full(256, i, np.float32) for i in range(24)}
+    cancel = threading.Event()
+    puts = []
+    real_put = jax.device_put
+
+    def counting_put(x, *a, **kw):
+        puts.append(1)
+        if len(puts) == 2:
+            cancel.set()                          # fires while mid-stream
+        return real_put(x, *a, **kw)
+
+    try:
+        jax.device_put = counting_put
+        with pytest.raises(BootCancelled):
+            streamed_device_put(tree, chunk_bytes=1024, prefetch=1,
+                                cancel=cancel)
+    finally:
+        jax.device_put = real_put
+    assert len(puts) < len(tree)                  # transfers stopped early
+
+
+# ----------------------------------------------- full platform integration
+
+
+def test_stream_driver_end_to_end_matches_eager(gateway):
+    """The unikernel_stream driver returns bit-identical outputs to the eager
+    unikernel driver and stamps TTFR into every timeline."""
+    gw, spec = gateway
+    tokens = gw.deployments[spec.name].example_tokens(seed=11)
+    ref = gw.invoke(spec.name, tokens, driver="unikernel", label="stream:ref")
+    out = gw.invoke(spec.name, tokens, driver="unikernel_stream",
+                    label="stream:out")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    tl = gw.recorder.timelines("stream:out")[-1]
+    assert "restore_stream_head" in tl.stage_s
+    assert tl.t_first_ready > 0.0
+    assert tl.t_ttfr > 0.0
+    assert tl.ttfr > 0.0
+
+
+def test_stream_driver_failed_stream_settles_exactly_once(gateway):
+    """Inject a store failure into the FIRST streamed restore: the dispatcher
+    must classify it transient, re-dispatch, and resolve the future exactly
+    once with the correct value."""
+    gw, spec = gateway
+    tokens = gw.deployments[spec.name].example_tokens(seed=13)
+    ref = gw.invoke(spec.name, tokens, driver="unikernel", label="fault:ref")
+    real_stream = blobstore_mod.stream_restore
+    calls = []
+
+    def failing_stream(store, key, cache=None, **kw):
+        calls.append(1)
+        if len(calls) == 1:
+            raise RuntimeError(f"chunks for {key} not found (injected)")
+        return real_stream(store, key, cache, **kw)
+
+    try:
+        blobstore_mod.stream_restore = failing_stream
+        out = gw.invoke(spec.name, tokens, driver="unikernel_stream",
+                        label="fault:out")
+    finally:
+        blobstore_mod.stream_restore = real_stream
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    assert len(calls) >= 2                        # failed once, retried
+    tls = gw.recorder.timelines("fault:out")
+    assert len(tls) == 1                          # settled exactly once
+
+
+def test_stream_boot_completion_extends_the_recorded_timeline(gateway):
+    """With the real AOT split the background thread swaps in the tail + fused
+    programs after first response: the recorded timeline must eventually carry
+    the background program stage and ttfr <= the extended boot wall."""
+    gw, spec = gateway
+    dep = gw.deployments[spec.name]
+    gw.invoke(spec.name, driver="unikernel_stream", label="stream:bg")
+    tl = gw.recorder.timelines("stream:bg")[-1]
+    if not dep.split_ok:
+        pytest.skip("AOT split unavailable on this host")
+    deadline = time.time() + 30
+    while "deserialize_program_bg" not in tl.stage_s and time.time() < deadline:
+        time.sleep(0.01)
+    assert "deserialize_program_bg" in tl.stage_s
+    # ordering invariants (ttfr vs wall is load-dependent: on a warm tier the
+    # background tail is nearly free while ttfr still includes the execution)
+    assert 0.0 < tl.t_first_ready <= tl.t_ttfr
+    assert tl.stage_s["deserialize_program_bg"] > 0.0
+    assert tl.t_boot_wall >= tl.stage_s["deserialize_program_bg"]
+    assert gw.snapshots.read_index(dep.image.key).get("first_use_order"), \
+        "deploy must persist the first-use order into the manifest"
