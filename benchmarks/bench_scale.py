@@ -49,6 +49,7 @@ import numpy as np  # noqa: E402
 
 from repro.core.cluster import Cluster, HostFailure  # noqa: E402
 from repro.core.dispatcher import Dispatcher  # noqa: E402
+from repro.core.resilience import Deadline, DeadlineExceeded  # noqa: E402
 from repro.core.scheduler import PROGRAM_TIER, SchedulerConfig  # noqa: E402
 from repro.core.simclock import VirtualClock  # noqa: E402
 
@@ -257,6 +258,17 @@ class SimAgent:
         self.crash_p = 0.0
         self.store_slow = 1.0
         self.peer_slow = 1.0
+        # per-host crash probability overrides (a FLAKY host, not a dead one:
+        # it accepts work and fails it — the case quarantine exists for)
+        self.flaky: Dict[int, float] = {}
+        # probability a peer-served artifact fails content verification; the
+        # model mirrors blobstore._verify_peer_chunks: re-hash every peer
+        # read, drop bad bytes, transparently refetch from the store tier —
+        # so corrupt bytes are NEVER served (corrupt_served is structural)
+        self.corrupt_p = 0.0
+        self.chunks_rehashed = 0
+        self.chunks_refetched = 0
+        self.corrupt_served = 0
 
     def preboot(self, host, dep, driver_name: str,
                 bucket_rows: Optional[int] = None) -> SimBootHandle:
@@ -273,7 +285,18 @@ class SimAgent:
             return m.boot_cached_ms / 1e3
         art = cache.fetch_from_peer(PROGRAM_TIER, key)
         if art is not None:
-            return (m.boot_cached_ms + m.peer_fetch_ms * self.peer_slow) / 1e3
+            self.chunks_rehashed += 1          # every peer read is verified
+            peer_ms = m.peer_fetch_ms * self.peer_slow
+            if self.rng.random() < self.corrupt_p:
+                # verification caught bad peer bytes: pay the peer transfer
+                # AND a transparent store refetch — correctness costs
+                # latency here, never wrong bytes
+                self.chunks_refetched += 1
+                cache.fetch_from_store(PROGRAM_TIER, key, _PAYLOAD,
+                                       m.program_nbytes)
+                return (m.boot_cached_ms + peer_ms
+                        + m.store_fetch_ms * self.store_slow) / 1e3
+            return (m.boot_cached_ms + peer_ms) / 1e3
         cache.fetch_from_store(PROGRAM_TIER, key, _PAYLOAD, m.program_nbytes)
         return (m.boot_cold_ms + m.store_fetch_ms * self.store_slow) / 1e3
 
@@ -282,6 +305,12 @@ class SimAgent:
         t0 = self.clock.now()
         tl.t_dispatch = t0
         host.check_alive()
+        deadline = getattr(tl, "deadline", None)
+        if deadline is not None and deadline.expired():
+            # same cooperative-cancellation point the real agent has: the
+            # slot-queue wait ate the budget, don't start the boot
+            raise DeadlineExceeded(f"deadline passed at dispatch on "
+                                   f"host {host.host_id}")
         self.boots += 1
         self._pkey = dep.image.key
         boot_s = self._boot_seconds(host)
@@ -289,7 +318,7 @@ class SimAgent:
             # the speculative boot ran while this request sat in the host
             # queue: credit the elapsed overlap against the boot
             boot_s = max(0.0, boot_s - (t0 - preboot.t_launch))
-        if self.rng.random() < self.crash_p:
+        if self.rng.random() < self.flaky.get(host.host_id, self.crash_p):
             # executor crash partway through the boot: charge what elapsed,
             # surface the transient fault for the dispatcher to retry
             self.crashes_injected += 1
@@ -329,6 +358,21 @@ def default_chaos(duration_s: float, n_kills: int = 2, n_adds: int = 2,
     return sorted(ops, key=lambda o: o["t"])
 
 
+def resilience_chaos(duration_s: float) -> List[dict]:
+    """The resilience-gate schedule: one host turns FLAKY (85% crash — alive
+    but poison, the scenario quarantine exists for), the store slows, a
+    corrupt-chunk window poisons peer transfers, and a fleet-wide crash
+    window stresses the retry budget. Windows are spread so the breaker's
+    cooldown/probe cycle visibly revives the flaky host before the run ends."""
+    d = duration_s
+    return sorted([
+        {"t": d * 0.15, "op": "flaky_host", "p": 0.85, "duration": d * 0.25},
+        {"t": d * 0.45, "op": "store_slow", "factor": 4.0, "duration": d * 0.15},
+        {"t": d * 0.55, "op": "corrupt_chunks", "p": 0.30, "duration": d * 0.15},
+        {"t": d * 0.75, "op": "crash_window", "p": 0.02, "duration": d * 0.10},
+    ], key=lambda o: o["t"])
+
+
 # -------------------------------------------------------------------- runner
 
 @dataclass
@@ -347,6 +391,13 @@ class ScaleConfig:
     chaos: Optional[List[dict]] = None     # None -> default_chaos(duration)
     model: ServiceModel = field(default_factory=ServiceModel)
     scheduler: Optional[SchedulerConfig] = None
+    # per-request deadline (None = unbounded); the resilience mode sets one so
+    # deadline propagation runs on every request of the chaos run
+    deadline_s: Optional[float] = None
+    # resilience mode: short breaker cooldown so the quarantine -> half-open
+    # probe -> revival cycle completes inside the run, and the report grows a
+    # "resilience" section the CLI gates on
+    resilience: bool = False
 
     @property
     def duration_s(self) -> float:
@@ -360,8 +411,11 @@ class ScaleRunner:
         self.cfg = cfg
         self.clock = VirtualClock()
         self.rng = random.Random(cfg.seed)
+        scheduler = cfg.scheduler
+        if scheduler is None and cfg.resilience:
+            scheduler = SchedulerConfig(breaker_cooldown_s=2.0)
         self.cluster = SimCluster(self.clock, cfg.n_hosts, cfg.slots_per_host,
-                                  scheduler=cfg.scheduler)
+                                  scheduler=scheduler)
         self.agent = SimAgent(self.clock, cfg.model, self.rng)
         self.dispatcher = Dispatcher(
             self.cluster, self.agent, max_retries=cfg.max_retries,
@@ -384,6 +438,7 @@ class ScaleRunner:
         self.adds = 0
         self.revives = 0
         self.removes = 0
+        self.flaky_windows = 0
 
     # ------------------------------------------------------------ workload
     def _pick_fn(self) -> SimDeployment:
@@ -396,7 +451,10 @@ class ScaleRunner:
     def _submit_one(self) -> None:
         dep = self._pick_fn()
         t0 = self.clock.now()
-        fut = self.dispatcher.submit(dep, None, "sim", label=dep.name)
+        deadline = Deadline.after(self.cfg.deadline_s, clock=self.clock) \
+            if self.cfg.deadline_s is not None else None
+        fut = self.dispatcher.submit(dep, None, "sim", label=dep.name,
+                                     deadline=deadline)
         self.submitted += 1
 
         def on_settle(f: Future, t0=t0) -> None:
@@ -463,14 +521,31 @@ class ScaleRunner:
             self.agent.crash_p = float(op.get("p", 0.02))
             self.clock.schedule(float(op["duration"]),
                                 lambda: setattr(self.agent, "crash_p", 0.0))
+        elif kind == "flaky_host":
+            alive = self.cluster.alive_hosts()
+            if alive:
+                host = self.rng.choice(alive)
+                self.agent.flaky[host.host_id] = float(op.get("p", 0.85))
+                self.flaky_windows += 1
+                self.clock.schedule(
+                    float(op["duration"]),
+                    lambda hid=host.host_id: self.agent.flaky.pop(hid, None))
+        elif kind == "corrupt_chunks":
+            self.agent.corrupt_p = float(op.get("p", 0.3))
+            self.clock.schedule(float(op["duration"]),
+                                lambda: setattr(self.agent, "corrupt_p", 0.0))
         else:
             raise ValueError(f"unknown chaos op: {kind!r}")
 
     # ----------------------------------------------------------------- run
     def run(self) -> Dict[str, Any]:
         cfg = self.cfg
-        chaos = cfg.chaos if cfg.chaos is not None \
-            else default_chaos(cfg.duration_s)
+        if cfg.chaos is not None:
+            chaos = cfg.chaos
+        elif cfg.resilience:
+            chaos = resilience_chaos(cfg.duration_s)
+        else:
+            chaos = default_chaos(cfg.duration_s)
         t_wall = time.perf_counter()
         self._arrivals()
         self._apply_chaos(chaos)
@@ -487,7 +562,7 @@ class ScaleRunner:
         slo_met = (unsettled == 0 and self.failed == 0
                    and lat_ms.size > 0 and float(q[2]) <= cfg.slo_ms)
         return {
-            "bench": "scale_chaos",
+            "bench": "resilience_chaos" if cfg.resilience else "scale_chaos",
             "schema_version": 1,
             "config": {
                 "n_requests": cfg.n_requests, "n_hosts": cfg.n_hosts,
@@ -497,6 +572,8 @@ class ScaleRunner:
                 "hedge_factor": cfg.hedge_factor,
                 "max_retries": cfg.max_retries,
                 "speculative": cfg.speculative,
+                "resilience": cfg.resilience,
+                "deadline_s": cfg.deadline_s,
                 "chaos": chaos,
             },
             "requests": {
@@ -522,6 +599,26 @@ class ScaleRunner:
                 "preboots_launched": self.dispatcher.preboots_launched,
                 "crashes_injected": self.agent.crashes_injected,
                 "boots": self.agent.boots,
+            },
+            "resilience": {
+                "attempts": self.dispatcher.attempts,
+                "submitted_to_dispatcher": self.dispatcher.submitted,
+                "attempt_amplification": self.dispatcher.attempts
+                / max(self.dispatcher.submitted, 1),
+                "retries_denied": self.dispatcher.retries_denied,
+                "retry_budget": {
+                    "deposits": self.dispatcher.retry_budget.deposits,
+                    "spent": self.dispatcher.retry_budget.spent,
+                    "denied": self.dispatcher.retry_budget.denied,
+                    "tokens": self.dispatcher.retry_budget.tokens,
+                },
+                "breakers": placement["breakers"],
+                "quarantine_skips": placement["quarantine_skips"],
+                "flaky_windows": self.flaky_windows,
+                "chunks_rehashed": self.agent.chunks_rehashed,
+                "chunks_refetched": self.agent.chunks_refetched,
+                "corrupt_served": self.agent.corrupt_served,
+                "deadline_s": cfg.deadline_s,
             },
             "placement": {
                 "program_hit_rate": placement["program_hit_rate"],
@@ -564,9 +661,16 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="JSON list of chaos ops (docs/BENCHMARKS.md)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI gate: 1e4 requests over 16 hosts")
-    ap.add_argument("--out", type=str, default=str(ROOT / "BENCH_6_scale.json"))
+    ap.add_argument("--resilience", action="store_true",
+                    help="resilience chaos (flaky host / slow store / corrupt "
+                         "chunks) with deadline + amplification gates; writes "
+                         "BENCH_8_resilience.json by default")
+    ap.add_argument("--out", type=str, default=None)
     args = ap.parse_args(argv)
 
+    if args.out is None:
+        args.out = str(ROOT / ("BENCH_8_resilience.json" if args.resilience
+                               else "BENCH_6_scale.json"))
     if args.smoke:
         args.requests = min(args.requests, 10_000)
         args.hosts = min(args.hosts, 16)
@@ -581,7 +685,9 @@ def main(argv: Optional[List[str]] = None) -> int:
         n_requests=args.requests, n_hosts=args.hosts,
         slots_per_host=args.slots, rate_rps=args.rate,
         n_functions=args.functions, seed=args.seed, slo_ms=args.slo_ms,
-        speculative=not args.no_speculative, chaos=chaos)
+        speculative=not args.no_speculative, chaos=chaos,
+        resilience=args.resilience,
+        deadline_s=10.0 if args.resilience else None)
     result = run_scale(cfg)
 
     out = Path(args.out)
@@ -616,6 +722,33 @@ def main(argv: Optional[List[str]] = None) -> int:
     if not s["met"]:
         print("bench-scale: FAIL — SLO breached")
         return 1
+    if args.resilience:
+        res = result["resilience"]
+        amp = res["attempt_amplification"]
+        print(f"bench-scale: amplification={amp:.3f} "
+              f"breaker_opens={res['breakers']['opens']} "
+              f"probe_revivals={res['breakers']['probe_revivals']} "
+              f"quarantine_skips={res['quarantine_skips']} "
+              f"rehashed={res['chunks_rehashed']} "
+              f"refetched={res['chunks_refetched']} "
+              f"corrupt_served={res['corrupt_served']}")
+        fails = []
+        if res["corrupt_served"] > 0:
+            fails.append(f"{res['corrupt_served']} corrupt restore(s) served")
+        if amp > 2.0:
+            fails.append(f"attempt amplification {amp:.2f} > 2.0")
+        if res["breakers"]["opens"] < 1:
+            fails.append("no breaker ever opened under a flaky host")
+        if res["breakers"]["probe_revivals"] < 1:
+            fails.append("no half-open probe ever revived a host")
+        if res["quarantine_skips"] < 1:
+            fails.append("quarantine never filtered a routing candidate")
+        if res["chunks_refetched"] < 1:
+            fails.append("corrupt-chunk window produced no verified refetch")
+        if fails:
+            for msg in fails:
+                print(f"bench-scale: FAIL — {msg}")
+            return 1
     return 0
 
 

@@ -250,6 +250,35 @@ def scale_table() -> str:
     return "\n".join(rows)
 
 
+def resilience_table() -> str:
+    """Resilience chaos headline numbers (deadlines + breakers + quarantine +
+    integrity), from the ``BENCH_*_resilience.json`` report(s) that
+    ``bench_scale.py --resilience`` writes at the repo root."""
+    import json
+    reports = sorted(ROOT.glob("BENCH_*_resilience.json"))
+    if not reports:
+        return "(run benchmarks/bench_scale.py --resilience to populate)"
+    rows = ["| requests | hosts | p50 ms | p99 ms | SLO met | amplification "
+            "| retries denied | breaker opens | probe revivals | quarantine "
+            "skips | chunks refetched | corrupt served |",
+            "|---|" + "---|" * 11]
+    for path in reports:
+        d = json.loads(path.read_text())
+        lat, res = d["latency_ms"], d["resilience"]
+        rows.append(
+            f"| {d['requests']['submitted']} | {d['config']['n_hosts']} "
+            f"| {lat['p50']:.1f} | {lat['p99']:.1f} "
+            f"| {'yes' if d['slo']['met'] else 'NO'} "
+            f"| {res['attempt_amplification']:.3f}x "
+            f"| {res['retries_denied']} "
+            f"| {res['breakers']['opens']} "
+            f"| {res['breakers']['probe_revivals']} "
+            f"| {res['quarantine_skips']} "
+            f"| {res['chunks_refetched']} "
+            f"| {res['corrupt_served']} |")
+    return "\n".join(rows)
+
+
 def variants_table() -> str:
     recs = [r for r in load_records(variant=None) if r["variant"] != "baseline"]
     if not recs:
@@ -293,6 +322,10 @@ SKELETON = """# Experiments
 
 <!-- SCALE_TABLE -->
 
+## Resilience under chaos
+
+<!-- RESILIENCE_TABLE -->
+
 ## Multi-pod dry run
 
 <!-- DRYRUN_TABLE -->
@@ -317,6 +350,7 @@ TABLES = (
     ("COALESCING_TABLE", "Coalescing under open-loop load", coalescing_table),
     ("PLACEMENT_TABLE", "Placement under multi-host load", placement_table),
     ("SCALE_TABLE", "Scale/chaos under virtual time", scale_table),
+    ("RESILIENCE_TABLE", "Resilience under chaos", resilience_table),
     ("DRYRUN_TABLE", "Multi-pod dry run", dryrun_table),
     ("ROOFLINE_TABLE", "Roofline", roofline_table),
     ("VARIANTS_TABLE", "Variants", variants_table),

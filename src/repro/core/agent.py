@@ -33,9 +33,13 @@ from repro.core.metrics import now as _default_now
 
 class Agent:
     def __init__(self, recorder: Recorder, residency: ResidencyTracker,
-                 clock=None) -> None:
+                 clock=None, claim_timeout_s: float = 600.0) -> None:
         self.recorder = recorder
         self.residency = residency
+        # how long a request will wait for a speculative pre-boot it claimed
+        # before giving up (the boot handle's timeout error names the boot's
+        # last completed stage)
+        self.claim_timeout_s = float(claim_timeout_s)
         self._now = clock.now if clock is not None else _default_now
         # executor acquisitions (boots, pool checkouts, donor reuses) — with
         # coalescing, requests_served / boots is the boots-per-request metric
@@ -65,14 +69,16 @@ class Agent:
             self.boots += 1
         if preboot is not None:
             try:
-                result = preboot.claim()
+                result = preboot.claim(self.claim_timeout_s)
             except BootCancelled:
                 pass                          # lost a race — boot fresh below
             else:
                 tl.record_boot(result.stage_s, result.wall_s,
                                bytes_fetched=result.bytes_fetched,
                                bytes_deduped=result.bytes_deduped,
-                               t_first_ready=result.t_first_ready)
+                               t_first_ready=result.t_first_ready,
+                               chunks_rehashed=result.chunks_rehashed,
+                               chunks_refetched=result.chunks_refetched)
                 tl.preboot = True
                 return result.executor
         return driver.start(dep, tl, bucket_rows=bucket_rows)
@@ -82,6 +88,11 @@ class Agent:
                preboot: Optional[BootHandle] = None) -> Any:
         tl.t_dispatch = self._now()
         host.check_alive()
+        deadline = getattr(tl, "deadline", None)
+        if deadline is not None:
+            # the slot-queue wait may already have eaten the budget: abort
+            # BEFORE starting a boot that cannot possibly serve in time
+            deadline.check("dispatch")
 
         if driver_name == "noop":                       # gateway/dispatch floor probe
             tl.t_start_begin = tl.t_exec_begin = self._now()
@@ -143,6 +154,9 @@ class Agent:
         """
         tl.t_dispatch = self._now()
         host.check_alive()
+        deadline = getattr(tl, "deadline", None)
+        if deadline is not None:
+            deadline.check("dispatch")
         driver = host.drivers[driver_name]
         tl.t_start_begin = self._now()
         ex = self._claim_or_start(driver, dep, tl, preboot,

@@ -35,7 +35,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 from concurrent.futures import Future, InvalidStateError, wait
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -102,15 +102,18 @@ class CoalescedBatch:
 
 
 class _Pending:
-    __slots__ = ("tokens", "future", "t_enqueue", "label", "speculative")
+    __slots__ = ("tokens", "future", "t_enqueue", "label", "speculative",
+                 "deadline")
 
     def __init__(self, tokens: np.ndarray, future: Future, label: Optional[str],
-                 t_enqueue: float, speculative: Optional[bool] = None):
+                 t_enqueue: float, speculative: Optional[bool] = None,
+                 deadline=None):
         self.tokens = tokens
         self.future = future
         self.t_enqueue = t_enqueue
         self.label = label
         self.speculative = speculative
+        self.deadline = deadline
 
 
 class _FnQueue:
@@ -176,12 +179,17 @@ class Coalescer:
         self.batches = 0                   # batches dispatched (first attempts)
         self.batch_sizes = Series()        # requests per dispatched batch
         self.queue_delay = Series()        # seconds each member waited to flush
+        # set by the gateway's admission controller: while it returns True
+        # (brownout), flush windows clamp to the minimum and batches dispatch
+        # without hedging — shed latency slack, keep shipping work
+        self.brownout: Optional[Callable[[], bool]] = None
 
     # ------------------------------------------------------------------ public
     def submit(self, dep, tokens, driver_name: str,
                label: Optional[str] = None,
                needs_bucket_image: bool = True,
-               speculative: Optional[bool] = None) -> Future:
+               speculative: Optional[bool] = None,
+               deadline=None) -> Future:
         """Enqueue one request; returns its per-request Future."""
         tokens = np.asarray(tokens)
         expected = (dep.spec.batch_size, dep.spec.prompt_len)
@@ -201,12 +209,16 @@ class Coalescer:
             self.requests += 1
         with q.lock:
             q.pending.append(_Pending(tokens, fut, label, self._now(),
-                                      speculative))
+                                      speculative, deadline))
             n = len(q.pending)
             flush_now = self._draining or n >= self.cfg.max_batch
             if not flush_now and n == 1:
+                window = q.window
+                if self.brownout is not None and self.brownout():
+                    # overload: stop buying batch size with wait time
+                    window = self.cfg.min_window_s
                 q.timer_entry = self._timer.schedule(
-                    q.window, lambda: self._flush(q, from_timer=True))
+                    window, lambda: self._flush(q, from_timer=True))
         if flush_now:
             self._flush(q)
         return fut
@@ -283,11 +295,21 @@ class Coalescer:
         # per-call speculative opt-ins survive coalescing: any member asking
         # for a speculative pre-boot gets one for the whole batch
         speculative = True if any(m.speculative for m in members) else None
+        # the batch inherits the TIGHTEST member deadline — one boot serves
+        # every member, so the first member to expire aborts it for all (the
+        # dispatcher's retry then re-dispatches the whole unit)
+        member_deadlines = [m.deadline for m in members if m.deadline is not None]
+        batch_deadline = (min(member_deadlines, key=lambda d: d.t_deadline)
+                          if member_deadlines else None)
+        hedging = False if (self.brownout is not None and self.brownout()) \
+            else None
         try:
             batch = self._build_batch(q, members, t_flush)
             fut = self.dispatcher.submit_batch(q.dep, batch, q.driver_name,
                                                label=members[0].label,
-                                               speculative=speculative)
+                                               speculative=speculative,
+                                               deadline=batch_deadline,
+                                               hedging=hedging)
         except BaseException as e:     # building/dispatch failed: fail members
             with q.lock:
                 q.inflight -= 1

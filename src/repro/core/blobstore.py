@@ -65,6 +65,21 @@ def chunk_id(data: bytes) -> str:
     return hashlib.blake2b(data, digest_size=20).hexdigest()
 
 
+class ChunkIntegrityError(RuntimeError):
+    """Bytes read for a chunk do not hash to its content id.
+
+    Raised only when there is no further tier to fall back to (the global
+    store is the source of truth): a restore NEVER silently serves bytes
+    that fail their own content address. Peer-side mismatches never raise —
+    they are dropped and transparently re-fetched from the store.
+    """
+
+    def __init__(self, cid: str, where: str = "store") -> None:
+        super().__init__(f"chunk {cid} failed integrity check ({where})")
+        self.cid = cid
+        self.where = where
+
+
 def split_chunks(data: bytes, chunk_bytes: int) -> List[bytes]:
     """Fixed-size split; the final chunk carries the remainder."""
     if not data:
@@ -98,6 +113,8 @@ class ChunkStore:
         self.puts = 0
         self.dedup_hits = 0
         self.bytes_deduped = 0
+        self.rehashes = 0              # reads whose digest was re-checked
+        self.integrity_failures = 0    # reads that failed the check (raised)
         self._load_refs()
 
     # ------------------------------------------------------------------ paths
@@ -159,8 +176,27 @@ class ChunkStore:
             self._save_refs()
             return out
 
-    def get(self, cid: str) -> bytes:
-        return self._path(cid).read_bytes()
+    def get(self, cid: str, verify: bool = True) -> bytes:
+        """Read one chunk, re-checking its content address by default.
+
+        The store is the LAST tier — there is nowhere further to re-fetch
+        from — so a mismatch re-reads once (a torn read is transient; rot is
+        not) and then raises :class:`ChunkIntegrityError` rather than ever
+        returning wrong bytes.
+        """
+        data = self._path(cid).read_bytes()
+        if not verify:
+            return data
+        with self._lock:
+            self.rehashes += 1
+        if chunk_id(data) == cid:
+            return data
+        data = self._path(cid).read_bytes()            # one re-read: torn read?
+        if chunk_id(data) == cid:
+            return data
+        with self._lock:
+            self.integrity_failures += 1
+        raise ChunkIntegrityError(cid)
 
     def has(self, cid: str) -> bool:
         return self._path(cid).exists()
@@ -438,10 +474,11 @@ class HostChunkTier:
 
 
 class DeltaStats:
-    """What one delta restore moved, skipped, and spent."""
+    """What one delta restore moved, skipped, verified, and spent."""
 
     __slots__ = ("source", "bytes_total", "bytes_fetched", "bytes_deduped",
-                 "bytes_from_peer", "bytes_from_store", "t_peer_s", "t_store_s")
+                 "bytes_from_peer", "bytes_from_store", "t_peer_s", "t_store_s",
+                 "chunks_rehashed", "chunks_refetched")
 
     def __init__(self) -> None:
         self.source = "delta"
@@ -452,6 +489,38 @@ class DeltaStats:
         self.bytes_from_store = 0
         self.t_peer_s = 0.0
         self.t_store_s = 0.0
+        # integrity trail: chunks whose digest was re-checked on read, and
+        # peer chunks that FAILED the check and fell through to the store
+        self.chunks_rehashed = 0
+        self.chunks_refetched = 0
+
+
+def _verify_peer_chunks(fetched: Dict[str, bytes], stats: DeltaStats,
+                        cache=None) -> None:
+    """Re-hash peer-served chunks; drop (and un-account) any that lie.
+
+    A dropped chunk simply stays missing, so the caller's store path
+    re-fetches it — the transparent peer -> store fallback. Outcomes feed the
+    ``peer`` circuit breaker when the host cache carries a breaker board, so
+    a peer serving rot gets bypassed entirely for a cooldown.
+    """
+    if not fetched:
+        return
+    bad = [cid for cid, data in fetched.items() if chunk_id(data) != cid]
+    stats.chunks_rehashed += len(fetched)
+    breakers = getattr(cache, "breakers", None)
+    if not bad:
+        if breakers is not None:
+            breakers.record("peer", True)
+        return
+    # the corrupt bytes DID move over the wire (the host cache keeps them in
+    # its transfer accounting) but they bought nothing: un-count them from
+    # the restore's useful-bytes view so bytes_deduped stays total - useful
+    for cid in bad:
+        stats.bytes_from_peer -= len(fetched.pop(cid))
+    stats.chunks_refetched += len(bad)
+    if breakers is not None:
+        breakers.record("peer", False)
 
 
 def manifest_chunk_sizes(index: Dict[str, Any]) -> Dict[str, int]:
@@ -530,10 +599,14 @@ def _delta_restore_once(store, index, key: str, cache,
             fetched = cache.fetch_chunks_from_peer(key, missing)
             stats.t_peer_s = time.perf_counter() - t0 if fetched else 0.0
             stats.bytes_from_peer = sum(len(b) for b in fetched.values())
+            # integrity gate: a chunk whose bytes don't hash to its id is
+            # dropped here and stays missing -> re-fetched from the store
+            _verify_peer_chunks(fetched, stats, cache)
             missing = [c for c in missing if c not in fetched]
         if missing:
             t0 = time.perf_counter()
             blobs = {cid: store.blobs.get(cid) for cid in missing}
+            stats.chunks_rehashed += len(blobs)   # store reads verify in get()
             store_bytes = sum(len(b) for b in blobs.values())
             if cache is not None:
                 cache.account_store_chunks(store_bytes)
@@ -641,6 +714,9 @@ def _stream_restore_once(store, index, key: str, cache,
             peer = cache.fetch_chunks_from_peer(key, missing)
             stats.t_peer_s = time.perf_counter() - t0 if peer else 0.0
             stats.bytes_from_peer = sum(len(b) for b in peer.values())
+            # a lying peer chunk is dropped here; the on-demand store path
+            # below re-fetches it when its leaf comes up in stream order
+            _verify_peer_chunks(peer, stats, cache)
             fetched.update(peer)
         store_bytes = [0]
 
@@ -652,6 +728,7 @@ def _stream_restore_once(store, index, key: str, cache,
             if data is None:            # peer didn't answer / tier evicted it
                 t0 = time.perf_counter()
                 data = store.blobs.get(cid)
+                stats.chunks_rehashed += 1      # verified inside get()
                 stats.t_store_s += time.perf_counter() - t0
                 store_bytes[0] += len(data)
                 fetched[cid] = data

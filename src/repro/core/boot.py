@@ -112,8 +112,16 @@ class BootContext:
         # only by the weights track; read by the engine after the tracks join.
         self.bytes_fetched: int = 0
         self.bytes_deduped: int = 0
+        # integrity trail (repro.core.blobstore): chunks re-hashed on read /
+        # re-fetched from the store after a peer-side digest mismatch
+        self.chunks_rehashed: int = 0
+        self.chunks_refetched: int = 0
         # streamed-boot plumbing (set by the engine / StreamRestore):
         self.cancel: Optional[threading.Event] = None   # the handle's cancel
+        # request deadline (repro.core.resilience.Deadline or None): stages
+        # and chunk loops treat expiry like a cancel, so a boot that cannot
+        # finish in time frees its host slot instead of completing uselessly
+        self.deadline = None
         self.t_begin: float = 0.0
         self.gates: Optional[ReadinessGates] = None
         self.stream: Any = None                         # _StreamState
@@ -324,6 +332,8 @@ class RestoreWeightsHost(Stage):
                     self.extra_s["fetch_chunks_store"] = stats.t_store_s
             ctx.bytes_fetched += stats.bytes_fetched
             ctx.bytes_deduped += stats.bytes_deduped
+            ctx.chunks_rehashed += stats.chunks_rehashed
+            ctx.chunks_refetched += stats.chunks_refetched
             ctx.host_params = tree
             return
         tree = dep.snapshots.load_host(key, mmap=self.mmap)
@@ -344,7 +354,8 @@ class DevicePut(Stage):
 
     def run(self, ctx: BootContext) -> None:
         ctx.params = streamed_device_put(ctx.host_params, self.chunk_bytes,
-                                         self.prefetch, cancel=ctx.cancel)
+                                         self.prefetch, cancel=ctx.cancel,
+                                         deadline=ctx.deadline)
         ctx.host_params = None
 
 
@@ -434,6 +445,8 @@ class _StreamState:
         self.device_tree: Any = None
         self.bytes_fetched = 0
         self.bytes_deduped = 0
+        self.chunks_rehashed = 0
+        self.chunks_refetched = 0
         self.bytes_recorded = False            # True once ctx took the byte counts
         self.device_leaves: List[Any] = []
 
@@ -476,9 +489,12 @@ class StreamRestore(Stage):
         device_leaves: List[Any] = [None] * len(entries)
         state.device_leaves = device_leaves
 
+        deadline = ctx.deadline
+
         def should_abort() -> bool:
             return state.abort.is_set() or \
-                (cancel is not None and cancel.is_set())
+                (cancel is not None and cancel.is_set()) or \
+                (deadline is not None and deadline.expired())
 
         def on_leaf(i: int, path: str, leaf) -> None:
             device_leaves[i] = jax.device_put(leaf)
@@ -492,6 +508,8 @@ class StreamRestore(Stage):
                                                   should_abort=should_abort)
                     state.bytes_fetched = stats.bytes_fetched
                     state.bytes_deduped = stats.bytes_deduped
+                    state.chunks_rehashed = stats.chunks_rehashed
+                    state.chunks_refetched = stats.chunks_refetched
                 else:
                     for i, path, leaf in dep.snapshots.iter_restore(key):
                         if should_abort():
@@ -520,6 +538,9 @@ class StreamRestore(Stage):
                 state.done.wait()      # surface the stream's own error below
         if state.error is not None:
             if isinstance(state.error, (RestoreAborted, BootCancelled)):
+                if deadline is not None and deadline.expired():
+                    from repro.core.resilience import DeadlineExceeded
+                    raise DeadlineExceeded(f"stream deadline passed: {key}")
                 raise BootCancelled(f"stream cancelled: {key}")
             raise state.error
         jax.block_until_ready([leaf for leaf in device_leaves
@@ -527,6 +548,8 @@ class StreamRestore(Stage):
         if state.done.is_set():
             ctx.bytes_fetched += state.bytes_fetched
             ctx.bytes_deduped += state.bytes_deduped
+            ctx.chunks_rehashed += state.chunks_rehashed
+            ctx.chunks_refetched += state.chunks_refetched
             state.bytes_recorded = True
 
 
@@ -620,12 +643,14 @@ class FinalizeStream(Stage):
                     stage_extra["deserialize_program_bg"] = now() - t1
                 ex._complete_restore(params=new_params, program=fused)
                 gates.mark_complete()
-                bf = bd = 0
+                bf = bd = cr = cf = 0
                 if not state.bytes_recorded:
                     bf, bd = state.bytes_fetched, state.bytes_deduped
+                    cr, cf = state.chunks_rehashed, state.chunks_refetched
                     state.bytes_recorded = True
                 gates.finish_timelines(stage_extra, now() - t0,
-                                       bytes_fetched=bf, bytes_deduped=bd)
+                                       bytes_fetched=bf, bytes_deduped=bd,
+                                       chunks_rehashed=cr, chunks_refetched=cf)
             except BaseException as e:  # noqa: BLE001 - relayed via gates
                 gates.fail(e)
 
@@ -638,7 +663,8 @@ class FinalizeStream(Stage):
 
 def streamed_device_put(host_tree: Any, chunk_bytes: int = 32 << 20,
                         prefetch: int = 2,
-                        cancel: Optional[threading.Event] = None) -> Any:
+                        cancel: Optional[threading.Event] = None,
+                        deadline=None) -> Any:
     """Chunked host->device transfer with read-ahead.
 
     Leaves are grouped into ~``chunk_bytes`` chunks; a producer thread forces
@@ -650,6 +676,15 @@ def streamed_device_put(host_tree: Any, chunk_bytes: int = 32 << 20,
     sides: the producer stops paging bytes in, the consumer stops issuing
     device transfers and raises :class:`BootCancelled` — a cancelled
     speculative pre-boot must not quietly complete the whole transfer.
+    ``deadline`` (a resilience Deadline) is treated the same way per chunk,
+    raising DeadlineExceeded so a too-slow transfer frees its slot.
+
+    Backpressure contract: the bounded queue can NEVER silently drop a
+    chunk. ``_put`` retries ``queue.Full`` forever while the consumer lives
+    (``stop`` is set only in the consumer's ``finally``), so every chunk is
+    delivered exactly once and in order; a False return — possible only
+    after the consumer died — makes the producer stop entirely, which is
+    deliberate shedding, not loss (tests/test_resilience.py pins this).
     """
     leaves, treedef = jax.tree.flatten(host_tree)
     if not leaves:
@@ -683,6 +718,8 @@ def streamed_device_put(host_tree: Any, chunk_bytes: int = 32 << 20,
             for idxs in chunks:
                 if cancel is not None and cancel.is_set():
                     return                         # cancelled: stop paging in
+                if deadline is not None and deadline.expired():
+                    return                         # too late: stop paging in
                 if not _put([(i, np.ascontiguousarray(leaves[i])) for i in idxs]):
                     return                         # drop refs, don't pin the tree
         except BaseException as e:  # noqa: BLE001 - relayed to consumer
@@ -701,6 +738,8 @@ def streamed_device_put(host_tree: Any, chunk_bytes: int = 32 << 20,
                 break
             if cancel is not None and cancel.is_set():
                 raise BootCancelled("cancelled mid device stream")
+            if deadline is not None:
+                deadline.check("device stream")
             for i, host_arr in item:
                 out[i] = jax.device_put(host_arr)  # async dispatch: overlaps
     finally:
@@ -737,12 +776,15 @@ class BootPlan:
 class BootResult:
     def __init__(self, executor: Executor, stage_s: Dict[str, float],
                  wall_s: float, bytes_fetched: int = 0,
-                 bytes_deduped: int = 0, t_first_ready: float = 0.0) -> None:
+                 bytes_deduped: int = 0, t_first_ready: float = 0.0,
+                 chunks_rehashed: int = 0, chunks_refetched: int = 0) -> None:
         self.executor = executor
         self.stage_s = stage_s
         self.wall_s = wall_s
         self.bytes_fetched = bytes_fetched
         self.bytes_deduped = bytes_deduped
+        self.chunks_rehashed = chunks_rehashed
+        self.chunks_refetched = chunks_refetched
         # when the executor became dispatchable (PARTIAL counts) — for a
         # streamed boot this is the moment the head gates opened, while
         # t_boot_wall keeps growing until the background tail settles
@@ -766,8 +808,15 @@ class BootHandle:
         self._claimed = False
         self._result: Optional[BootResult] = None
         self._error: Optional[BaseException] = None
+        # progress breadcrumb for claim-timeout diagnostics: the engine notes
+        # each stage as it completes (benign race: worst case the message
+        # under-reports by one stage)
+        self.last_stage: Optional[str] = None
 
     # -- producer side (engine) ------------------------------------------
+    def _note_stage(self, name: str) -> None:
+        self.last_stage = name
+
     def _finish(self, result: Optional[BootResult],
                 error: Optional[BaseException]) -> None:
         with self._lock:
@@ -786,9 +835,17 @@ class BootHandle:
         return self._done.is_set()
 
     def claim(self, timeout: float = 600.0) -> BootResult:
-        """Take ownership of the boot's executor (exactly-once)."""
+        """Take ownership of the boot's executor (exactly-once).
+
+        ``timeout`` is configurable per call site (the agent threads its own
+        ``claim_timeout_s`` through); the timeout error names the boot's last
+        completed stage so a wedged boot is diagnosable from the message.
+        """
         if not self._done.wait(timeout):
-            raise TimeoutError("boot did not complete in time")
+            raise TimeoutError(
+                f"boot of {self.driver_name} did not complete within "
+                f"{timeout:.1f}s (last completed stage: "
+                f"{self.last_stage or 'none'})")
         with self._lock:
             if self._cancel.is_set():
                 raise BootCancelled("boot was cancelled before claim")
@@ -816,13 +873,21 @@ class BootEngine:
 
     def execute(self, plan: BootPlan, dep, tl: Timeline, driver_name: str,
                 bucket_rows: Optional[int] = None, host=None) -> Executor:
-        """Synchronous boot: run the plan, stamp ``tl``, return the executor."""
+        """Synchronous boot: run the plan, stamp ``tl``, return the executor.
+
+        The request's deadline (if the gateway attached one to ``tl``) rides
+        into the plan as cooperative cancellation: stage boundaries and chunk
+        loops abort the boot the moment it can no longer finish in time.
+        """
         result = self._run(plan, dep, driver_name, cancel=None,
-                           bucket_rows=bucket_rows, host=host)
+                           bucket_rows=bucket_rows, host=host,
+                           deadline=getattr(tl, "deadline", None))
         tl.record_boot(result.stage_s, result.wall_s,
                        bytes_fetched=result.bytes_fetched,
                        bytes_deduped=result.bytes_deduped,
-                       t_first_ready=result.t_first_ready)
+                       t_first_ready=result.t_first_ready,
+                       chunks_rehashed=result.chunks_rehashed,
+                       chunks_refetched=result.chunks_refetched)
         return result.executor
 
     def launch(self, plan: BootPlan, dep, driver_name: str,
@@ -833,7 +898,8 @@ class BootEngine:
         def run() -> None:
             try:
                 result = self._run(plan, dep, driver_name, cancel=handle._cancel,
-                                   bucket_rows=bucket_rows, host=host)
+                                   bucket_rows=bucket_rows, host=host,
+                                   on_stage=handle._note_stage)
             except BaseException as e:  # noqa: BLE001 - relayed via claim()
                 handle._finish(None, e)
             else:
@@ -845,13 +911,15 @@ class BootEngine:
     # ------------------------------------------------------------- internal
     def _run(self, plan: BootPlan, dep, driver_name: str,
              cancel: Optional[threading.Event],
-             bucket_rows: Optional[int] = None, host=None) -> BootResult:
+             bucket_rows: Optional[int] = None, host=None,
+             deadline=None, on_stage=None) -> BootResult:
         ctx = BootContext(dep, driver_name, bucket_rows=bucket_rows, host=host)
         stage_s: Dict[str, float] = {}
         timing_lock = threading.Lock()
         errors: List[BaseException] = []
         t_begin = now()
         ctx.cancel = cancel
+        ctx.deadline = deadline
         ctx.t_begin = t_begin
 
         def run_track(stages: List[Stage]) -> None:
@@ -859,6 +927,8 @@ class BootEngine:
                 for stage in stages:
                     if cancel is not None and cancel.is_set():
                         raise BootCancelled(f"cancelled before {stage.name}")
+                    if deadline is not None:
+                        deadline.check(f"boot stage {stage.name}")
                     t0 = now()
                     stage.run(ctx)
                     dt = now() - t0
@@ -873,6 +943,8 @@ class BootEngine:
                             stage_s.update(extras)
                             dt = max(0.0, dt - sum(extras.values()))
                         stage_s[stage.name] = dt
+                    if on_stage is not None:
+                        on_stage(stage.name)
             except BaseException as e:  # noqa: BLE001 - re-raised below
                 errors.append(e)
 
@@ -897,7 +969,9 @@ class BootEngine:
         return BootResult(ctx.executor, stage_s, now() - t_begin,
                           bytes_fetched=ctx.bytes_fetched,
                           bytes_deduped=ctx.bytes_deduped,
-                          t_first_ready=now())
+                          t_first_ready=now(),
+                          chunks_rehashed=ctx.chunks_rehashed,
+                          chunks_refetched=ctx.chunks_refetched)
 
     @staticmethod
     def _dispose(ctx: BootContext) -> None:

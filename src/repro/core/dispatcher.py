@@ -6,7 +6,12 @@ routing is just least-loaded. What remains is what any large fleet needs:
 
 * retry: HostFailure -> re-dispatch to another host (stateless executors make this
   always-safe); a coalesced batch retries as ONE unit, so every member request is
-  re-dispatched exactly once per attempt;
+  re-dispatched exactly once per attempt. Retries are resilience-governed
+  (:mod:`repro.core.resilience`): exponential backoff + jitter on the shared
+  timer, a token-bucket retry budget that bounds attempt amplification under
+  fleet-wide failure, per-host circuit breakers fed from attempt outcomes (the
+  scheduler quarantines OPEN hosts), and per-request deadlines that refuse
+  retries which cannot finish in time;
 * hedging: if an attempt exceeds ``hedge_factor`` x the observed p95 latency for
   that (function, driver), launch a backup on a different host and take the first
   result — the tail-at-scale twin of the paper's overload observation (Fig 1/2:
@@ -27,6 +32,7 @@ losing speculative boot is cancelled and any executor it built is exited.
 """
 from __future__ import annotations
 
+import random
 import threading
 from concurrent.futures import Future
 from typing import Dict, Optional
@@ -37,6 +43,8 @@ from repro.core.batching import CoalescedBatch, settle_quietly as _settle
 from repro.core.cluster import Cluster, HostFailure
 from repro.core.deploy import Deployment
 from repro.core.metrics import P2Quantile, Timeline
+from repro.core.resilience import (Deadline, DeadlineExceeded,
+                                   ResilienceConfig, RetryBudget)
 from repro.core.simclock import Clock
 from repro.core.timerwheel import DeadlineTimer
 
@@ -83,7 +91,8 @@ class Dispatcher:
     def __init__(self, cluster: Cluster, agent: Agent, *,
                  max_retries: int = 3, hedge_factor: float = 3.0,
                  hedging: bool = True, speculative: bool = False,
-                 clock: Optional[Clock] = None) -> None:
+                 clock: Optional[Clock] = None,
+                 resilience: Optional[ResilienceConfig] = None) -> None:
         self.cluster = cluster
         self.agent = agent
         self.max_retries = max_retries
@@ -96,27 +105,63 @@ class Dispatcher:
         self.hedges_launched = 0
         self.preboots_launched = 0
         self.retries = 0
+        self.retries_denied = 0        # budget/deadline refused a retry
+        self.submitted = 0             # requests (or batches) accepted
+        self.attempts = 0              # attempts actually dispatched to a host
         self._lock = threading.Lock()
         self._hedge_timer = DeadlineTimer("dispatcher-hedge-timer",
                                           clock=self._clock)
+        # retry storms are the classic resilience failure mode: every retry is
+        # (a) delayed by exponential backoff + jitter (riding the SAME shared
+        # timer as hedges — virtual-clock friendly) and (b) paid for out of a
+        # token bucket that only refills with fresh traffic, so amplification
+        # is bounded even when the whole fleet is failing
+        self.res = resilience if resilience is not None else ResilienceConfig()
+        self.retry_budget = RetryBudget(fraction=self.res.retry_fraction,
+                                        floor=self.res.retry_floor,
+                                        cap=self.res.retry_cap)
+        # seeded: retry jitter must be reproducible under the virtual clock
+        self._rng = random.Random(0x5EED)
+        # the scheduler's per-host breakers quarantine flaky hosts out of
+        # routing; the dispatcher is where attempt outcomes are observed, so
+        # it feeds them (and binds the run's clock — breaker cooldowns must
+        # follow virtual time in simulation)
+        self._breakers = getattr(cluster.scheduler, "breakers", None) \
+            if hasattr(cluster, "scheduler") else None
+        if self._breakers is not None:
+            self._breakers.bind_clock(self._clock)
 
     # ------------------------------------------------------------------ public
     def submit(self, dep: Optional[Deployment], tokens, driver_name: str,
                label: Optional[str] = None,
-               speculative: Optional[bool] = None) -> Future:
-        """Dispatch one request; returns a Future with the result."""
+               speculative: Optional[bool] = None,
+               deadline: Optional[Deadline] = None,
+               hedging: Optional[bool] = None) -> Future:
+        """Dispatch one request; returns a Future with the result.
+
+        ``deadline`` rides the Timeline into every layer below (agent, boot
+        stages, device streaming) as cooperative cancellation; ``hedging``
+        overrides the dispatcher default per-request (brownout turns it off).
+        """
         result: Future = Future()
         tl = Timeline(t_enqueue=self._now())
+        tl.deadline = deadline
         spec = self.speculative if speculative is None else speculative
+        hedge_ok = self.hedging if hedging is None else hedging
+        with self._lock:
+            self.submitted += 1
+        self.retry_budget.deposit()
         # ONE mutable tried-set per request, shared by every attempt (primary,
         # retries, hedges) — see _attempt for the atomicity contract
         self._attempt(result, dep, tokens, driver_name, tl, tried=set(), n_try=0,
-                      label=label, allow_hedge=self.hedging, speculative=spec)
+                      label=label, allow_hedge=hedge_ok, speculative=spec)
         return result
 
     def submit_batch(self, dep: Deployment, batch: CoalescedBatch,
                      driver_name: str, label: Optional[str] = None,
-                     speculative: Optional[bool] = None) -> Future:
+                     speculative: Optional[bool] = None,
+                     deadline: Optional[Deadline] = None,
+                     hedging: Optional[bool] = None) -> Future:
         """Dispatch one coalesced batch as a single unit.
 
         The batch rides the exact retry/hedge machinery of ``submit`` — a
@@ -127,9 +172,14 @@ class Dispatcher:
         """
         result: Future = Future()
         tl = Timeline(t_enqueue=batch.t_earliest)
+        tl.deadline = deadline
         spec = self.speculative if speculative is None else speculative
+        hedge_ok = self.hedging if hedging is None else hedging
+        with self._lock:
+            self.submitted += 1
+        self.retry_budget.deposit()
         self._attempt(result, dep, batch, driver_name, tl, tried=set(), n_try=0,
-                      label=label, allow_hedge=self.hedging, speculative=spec)
+                      label=label, allow_hedge=hedge_ok, speculative=spec)
         return result
 
     def close(self) -> None:
@@ -154,6 +204,62 @@ class Dispatcher:
                 self.preboots_launched += 1
         return handle
 
+    def _record_host(self, host, ok: Optional[bool]) -> None:
+        """Feed an attempt outcome to the host's circuit breaker.
+
+        ``ok=None`` means "no evidence" (deadline expiry, cancelled attempt):
+        nothing is recorded, but a half-open probe slot the router consumed
+        for this attempt is released so the host cannot wedge in HALF_OPEN.
+        """
+        if self._breakers is None:
+            return
+        if ok is None:
+            self._breakers.release_probe_host(host.host_id)
+        else:
+            self._breakers.record_host(host.host_id, ok)
+
+    def _schedule_retry(self, result: Future, dep, tokens, driver_name: str,
+                        tl: Timeline, tried: set, n_try: int, label,
+                        allow_hedge: bool, speculative: bool,
+                        err: BaseException) -> bool:
+        """Queue attempt ``n_try + 1`` after exponential backoff + jitter.
+
+        The delay rides the shared deadline timer (no parked threads; virtual-
+        clock exact), and the retry is refused — settling ``err`` — when the
+        request's deadline cannot outlive the backoff or the retry budget is
+        dry (the no-retry-storm guarantee: budget refills only with FRESH
+        traffic, so fleet-wide failure degrades to bounded amplification).
+        """
+        deadline = getattr(tl, "deadline", None)
+        delay = self.res.backoff.delay(n_try, self._rng)
+        if deadline is not None and deadline.remaining() <= delay:
+            with self._lock:
+                self.retries_denied += 1
+            _settle(result, error=err)
+            return False
+        if not self.retry_budget.try_spend():
+            with self._lock:
+                self.retries_denied += 1
+            _settle(result, error=err)
+            return False
+        with self._lock:
+            self.retries += 1
+
+        def do_retry() -> None:
+            if result.done():
+                return
+            fresh = Timeline(t_enqueue=tl.t_enqueue)
+            fresh.deadline = deadline
+            self._attempt(result, dep, tokens, driver_name, fresh, tried,
+                          n_try + 1, label, allow_hedge, speculative)
+
+        entry = self._hedge_timer.schedule(delay, do_retry)
+        if entry.cancelled:
+            # timer already closed (shutdown mid-flight): run inline so the
+            # Future is never orphaned
+            do_retry()
+        return True
+
     def _attempt(self, result: Future, dep, tokens, driver_name: str, tl: Timeline,
                  tried: set, n_try: int, label, allow_hedge: bool,
                  speculative: bool = False, hedge: bool = False) -> bool:
@@ -167,6 +273,15 @@ class Dispatcher:
         rather than racing the straggler on its own machine.
         """
         batch = tokens if isinstance(tokens, CoalescedBatch) else None
+        deadline = getattr(tl, "deadline", None)
+        if deadline is not None and deadline.expired():
+            # no point routing work that cannot finish in time — settle now
+            # (a hedge just stands down: the primary still owns the request)
+            if hedge:
+                return False
+            _settle(result, error=DeadlineExceeded(
+                f"deadline passed before attempt {n_try}"))
+            return False
         key = f"{dep.name if dep else 'noop'}:{driver_name}"
         if batch is not None:
             key += f":b{batch.bucket}"      # service time scales with the bucket
@@ -220,34 +335,44 @@ class Dispatcher:
             # the host died (or its pool shut down) between route and submit
             if preboot is not None:
                 preboot.cancel()
+            self._record_host(host, False)
             if hedge:
                 return False
             if n_try < self.max_retries:
-                with self._lock:
-                    self.retries += 1
-                fresh = Timeline(t_enqueue=tl.t_enqueue)
-                return self._attempt(result, dep, tokens, driver_name, fresh,
-                                     tried, n_try + 1, label, allow_hedge,
-                                     speculative)
+                return self._schedule_retry(result, dep, tokens, driver_name,
+                                            tl, tried, n_try, label,
+                                            allow_hedge, speculative, e)
             _settle(result, error=e)
             return False
 
+        with self._lock:
+            self.attempts += 1
+
         def on_done(f: Future) -> None:
-            if preboot is not None and f.exception() is not None:
+            err = f.exception()
+            if preboot is not None and err is not None:
                 preboot.cancel()              # failed before (or during) claim
+            # breaker feed — even when the request already settled (a hedge
+            # won), this attempt's outcome is still evidence about the host.
+            # Deadline expiry is the REQUEST's fault, not the host's: record
+            # nothing, just hand back any probe slot this attempt consumed.
+            retryable = err is not None and (
+                isinstance(err, HostFailure) or _is_transient(err))
+            if err is None:
+                self._record_host(host, True)
+            elif retryable:
+                self._record_host(host, False)
+            else:
+                self._record_host(host, None)
             if result.done():
                 return
-            err = f.exception()
             if err is None:
                 _settle(result, value=f.result())
                 return
-            retryable = isinstance(err, HostFailure) or _is_transient(err)
             if retryable and n_try < self.max_retries:
-                with self._lock:
-                    self.retries += 1
-                fresh = Timeline(t_enqueue=tl.t_enqueue)
-                self._attempt(result, dep, tokens, driver_name, fresh, tried,
-                              n_try + 1, label, allow_hedge, speculative)
+                self._schedule_retry(result, dep, tokens, driver_name, tl,
+                                     tried, n_try, label, allow_hedge,
+                                     speculative, err)
             else:
                 _settle(result, error=err)
 
@@ -263,6 +388,7 @@ class Dispatcher:
                 if result.done() or fut.done():
                     return          # finished / failed (retry path owns failures)
                 fresh = Timeline(t_enqueue=tl.t_enqueue)
+                fresh.deadline = getattr(tl, "deadline", None)
                 # strict routing: the backup MUST land on a different host than
                 # every attempt so far, or not launch at all
                 if self._attempt(result, dep, tokens, driver_name, fresh, tried,

@@ -150,19 +150,25 @@ class ReadinessGates:
             if fin is None:
                 self._timelines.append(tl)
                 return
-        stage_s, wall_extra, bf, bd = fin
-        tl.record_boot(stage_s, wall_extra, bytes_fetched=bf, bytes_deduped=bd)
+        stage_s, wall_extra, bf, bd, cr, cf = fin
+        tl.record_boot(stage_s, wall_extra, bytes_fetched=bf, bytes_deduped=bd,
+                       chunks_rehashed=cr, chunks_refetched=cf)
 
     def finish_timelines(self, stage_s: Dict[str, float], wall_extra: float,
-                         bytes_fetched: int = 0, bytes_deduped: int = 0) -> None:
+                         bytes_fetched: int = 0, bytes_deduped: int = 0,
+                         chunks_rehashed: int = 0,
+                         chunks_refetched: int = 0) -> None:
         with self._lock:
             self._finish = (dict(stage_s), float(wall_extra),
-                            int(bytes_fetched), int(bytes_deduped))
+                            int(bytes_fetched), int(bytes_deduped),
+                            int(chunks_rehashed), int(chunks_refetched))
             tls = list(self._timelines)
             self._timelines.clear()
         for tl in tls:
             tl.record_boot(stage_s, wall_extra, bytes_fetched=bytes_fetched,
-                           bytes_deduped=bytes_deduped)
+                           bytes_deduped=bytes_deduped,
+                           chunks_rehashed=chunks_rehashed,
+                           chunks_refetched=chunks_refetched)
 
 
 class SplitServe:

@@ -34,6 +34,9 @@ from repro.core.compile_cache import CompileCache
 from repro.core.deploy import Deployment, deploy
 from repro.core.dispatcher import Dispatcher
 from repro.core.metrics import LatencyStats, Recorder, ResidencyTracker
+from repro.core.metrics import now as _default_now
+from repro.core.resilience import (AdmissionController, AdmissionRejected,
+                                   Deadline, ResilienceConfig)
 from repro.core.scheduler import SchedulerConfig
 from repro.core.simclock import Clock
 from repro.core.snapshot import SnapshotStore
@@ -46,7 +49,8 @@ class Gateway:
                  batching: Union[bool, BatchingConfig] = False,
                  scheduler: Optional[SchedulerConfig] = None,
                  clock: Optional[Clock] = None,
-                 default_driver: Optional[str] = None) -> None:
+                 default_driver: Optional[str] = None,
+                 resilience: Union[bool, ResilienceConfig, None] = None) -> None:
         assert mode in ("cold", "warm")
         self.mode = mode
         self._default_driver = default_driver
@@ -63,12 +67,27 @@ class Gateway:
         self.cluster = Cluster(n_hosts=n_hosts, slots_per_host=slots_per_host,
                                on_exit=self._account_exit, scheduler=scheduler)
         self.agent = Agent(self.recorder, self.residency, clock=clock)
+        self._now = clock.now if clock is not None else _default_now
+        # SLO-aware front door: resilience=True (or a ResilienceConfig) adds
+        # per-request deadlines, early shedding of deadline-infeasible work,
+        # and a brownout ladder (hedging off, streamed restores fall back to
+        # eager, coalescer windows clamp) that engages under overload
+        self.res_cfg: Optional[ResilienceConfig] = None
+        self.admission: Optional[AdmissionController] = None
+        if resilience:
+            self.res_cfg = resilience if isinstance(resilience, ResilienceConfig) \
+                else ResilienceConfig()
+            self.admission = AdmissionController(
+                self.res_cfg, capacity_slots=n_hosts * slots_per_host)
         self.dispatcher = Dispatcher(self.cluster, self.agent, hedging=hedging,
-                                     speculative=speculative, clock=clock)
+                                     speculative=speculative, clock=clock,
+                                     resilience=self.res_cfg)
         self.coalescer: Optional[Coalescer] = None
         if batching:
             cfg = batching if isinstance(batching, BatchingConfig) else BatchingConfig()
             self.coalescer = Coalescer(self.dispatcher, cfg, clock=clock)
+            if self.admission is not None:
+                self.coalescer.brownout = lambda: self.admission.brownout
         self.deployments: Dict[str, Deployment] = {}
         if mode == "warm":
             self.scaler = WarmPoolAutoscaler(self.cluster, self.deployments,
@@ -106,27 +125,69 @@ class Gateway:
 
     def invoke_async(self, fn_name: str, tokens: Optional[np.ndarray] = None,
                      driver: Optional[str] = None, label: Optional[str] = None,
-                     speculative: Optional[bool] = None) -> Future:
+                     speculative: Optional[bool] = None,
+                     deadline_s: Optional[float] = None) -> Future:
         dep = self.deployments[fn_name]
         driver = driver or self.default_driver()
         self.scaler.observe_arrival(fn_name)
         if tokens is None:
             tokens = dep.example_tokens()
+
+        # ---- resilience front door: deadline mint + admission + brownout
+        deadline = None
+        hedging: Optional[bool] = None
+        if deadline_s is None and self.res_cfg is not None:
+            deadline_s = self.res_cfg.default_deadline_s
+        if deadline_s is not None:
+            deadline = Deadline.after(deadline_s)
+        if self.admission is not None:
+            try:
+                self.admission.try_admit(deadline)
+            except AdmissionRejected as e:
+                # shed synchronously but settle ASYNCHRONOUSLY-shaped: callers
+                # treat invoke_async uniformly, a shed is just a failed Future
+                f: Future = Future()
+                f.set_exception(e)
+                return f
+            t_admit = self._now()
+            if self.admission.brownout:
+                # brownout ladder: stop paying for tail insurance (hedges,
+                # speculation) and stop carrying background restore tails —
+                # eager restores release host slots predictably under overload
+                hedging = False
+                speculative = False
+                if driver == "unikernel_stream" \
+                        and "unikernel" in self.cluster.hosts[0].drivers:
+                    driver = "unikernel"
+
+        fut: Future
         if self.coalescer is not None:
             drv = self.cluster.hosts[0].drivers.get(driver)
             if drv is not None and drv.supports_batch:
-                return self.coalescer.submit(
+                fut = self.coalescer.submit(
                     dep, tokens, driver, label=label,
                     needs_bucket_image=drv.needs_bucket_image,
-                    speculative=speculative)
-        return self.dispatcher.submit(dep, tokens, driver, label=label,
-                                      speculative=speculative)
+                    speculative=speculative, deadline=deadline)
+            else:
+                fut = self.dispatcher.submit(dep, tokens, driver, label=label,
+                                             speculative=speculative,
+                                             deadline=deadline, hedging=hedging)
+        else:
+            fut = self.dispatcher.submit(dep, tokens, driver, label=label,
+                                         speculative=speculative,
+                                         deadline=deadline, hedging=hedging)
+        if self.admission is not None:
+            fut.add_done_callback(
+                lambda _f: self.admission.release(self._now() - t_admit))
+        return fut
 
     def invoke(self, fn_name: str, tokens: Optional[np.ndarray] = None,
                driver: Optional[str] = None, label: Optional[str] = None,
-               timeout: float = 600.0, speculative: Optional[bool] = None):
+               timeout: float = 600.0, speculative: Optional[bool] = None,
+               deadline_s: Optional[float] = None):
         return self.invoke_async(fn_name, tokens, driver, label,
-                                 speculative=speculative).result(timeout)
+                                 speculative=speculative,
+                                 deadline_s=deadline_s).result(timeout)
 
     def invoke_many(self, fn_name: str,
                     tokens_list: Sequence[Optional[np.ndarray]],
@@ -167,6 +228,30 @@ class Gateway:
             entry["resident_bytes"] = residency.get(host_id, 0)
         summary["per_host_resident_bytes"] = residency
         return summary
+
+    def resilience_summary(self) -> Dict[str, object]:
+        """Attempt amplification, retry-budget state, breaker/quarantine
+        counters, and (when admission is on) shed/brownout accounting."""
+        d = self.dispatcher
+        budget = d.retry_budget
+        out: Dict[str, object] = {
+            "submitted": d.submitted,
+            "attempts": d.attempts,
+            "attempt_amplification": d.attempts / max(d.submitted, 1),
+            "retries": d.retries,
+            "retries_denied": d.retries_denied,
+            "retry_budget": {
+                "tokens": budget.tokens,
+                "deposits": budget.deposits,
+                "spent": budget.spent,
+                "denied": budget.denied,
+            },
+            "breakers": self.cluster.scheduler.breakers.summary(),
+            "quarantine_skips": self.cluster.scheduler.quarantine_skips,
+        }
+        if self.admission is not None:
+            out["admission"] = self.admission.summary()
+        return out
 
     def _account_exit(self, ex) -> None:
         self.residency.add_residency(ex.nbytes, ex.resident_seconds, ex.busy_seconds)

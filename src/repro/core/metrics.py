@@ -17,7 +17,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import threading
-from typing import Dict, List
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 
@@ -204,15 +204,29 @@ class Timeline:
     # chunk tier. bytes_fetched << snapshot size is the dedup win.
     bytes_fetched: float = 0.0
     bytes_deduped: float = 0.0
+    # integrity accounting (repro.core.blobstore): chunks whose BLAKE2 digest
+    # was re-checked on read, and chunks that FAILED a peer-side check and
+    # were transparently re-fetched from the global store. refetched > 0 with
+    # a correct restore is the integrity layer working; a mismatch with no
+    # fallback tier raises instead of serving wrong bytes.
+    chunks_rehashed: float = 0.0
+    chunks_refetched: float = 0.0
+    # per-request deadline (repro.core.resilience.Deadline or None), attached
+    # at the gateway and consulted by dispatcher attempts and boot stages
+    deadline: Optional[Any] = None
 
     def record_boot(self, stage_s: Dict[str, float], wall_s: float,
                     bytes_fetched: float = 0.0,
                     bytes_deduped: float = 0.0,
-                    t_first_ready: float = 0.0) -> None:
+                    t_first_ready: float = 0.0,
+                    chunks_rehashed: float = 0.0,
+                    chunks_refetched: float = 0.0) -> None:
         self.stage_s.update(stage_s)
         self.t_boot_wall += wall_s
         self.bytes_fetched += bytes_fetched
         self.bytes_deduped += bytes_deduped
+        self.chunks_rehashed += chunks_rehashed
+        self.chunks_refetched += chunks_refetched
         if t_first_ready:
             self.t_first_ready = t_first_ready
 

@@ -52,6 +52,7 @@ from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.core.blobstore import HostChunkTier
+from repro.core.resilience import BreakerBoard
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +73,15 @@ class SchedulerConfig:
     # store fetches — that difference is the locality win the bench measures.
     sim_store_s_per_gb: float = 0.0
     sim_peer_s_per_gb: float = 0.0
+    # circuit-breaker / quarantine knobs (repro.core.resilience.BreakerBoard):
+    # a host whose breaker is OPEN is filtered out of routing candidates
+    # (quarantined) until its cooldown elapses; then HALF_OPEN probe traffic
+    # decides whether it re-closes. quarantine=False restores pre-breaker
+    # routing (the breakers still record, they just don't gate).
+    quarantine: bool = True
+    breaker_failures: int = 5
+    breaker_cooldown_s: float = 30.0
+    breaker_probes: int = 1
 
 
 def program_artifact_key(image_key: str, bucket_rows: Optional[int]) -> str:
@@ -293,6 +303,10 @@ class HostArtifactCache:
         # peers' chunk tiers (only the delta ships)
         self.peer_chunks: Optional[Callable[[str, List[str], int],
                                             Dict[str, bytes]]] = None
+        # the scheduler's BreakerBoard (set by make_cache): gates the "peer"
+        # tier (open breaker -> skip straight to the global store) and records
+        # chunk-integrity outcomes from the restore paths
+        self.breakers = None
         self._lock = threading.Lock()
         self.peer_fetches = 0
         self.store_fetches = 0
@@ -361,6 +375,10 @@ class HostArtifactCache:
         not on the snapshot size. Returns {} with no peers or no overlap.
         """
         if self.peer_chunks is None:
+            return {}
+        if self.breakers is not None and not self.breakers.allow("peer"):
+            # peer tier breaker is open (repeated integrity failures): skip
+            # the tier entirely; the caller falls through to the global store
             return {}
         got = self.peer_chunks(key, cids, self.host_id)
         if not got:
@@ -440,10 +458,17 @@ class Scheduler:
         self.cluster = cluster
         self.cfg = cfg or SchedulerConfig()
         self.directory = CacheDirectory()
+        # per-target circuit breakers (host:N / peer / store). The dispatcher
+        # records attempt outcomes here and binds the run's clock; ``select``
+        # reads it to quarantine open hosts and admit half-open probes.
+        self.breakers = BreakerBoard(failures=self.cfg.breaker_failures,
+                                     cooldown_s=self.cfg.breaker_cooldown_s,
+                                     probes=self.cfg.breaker_probes)
         self._rr = 0
         self._lock = threading.Lock()
         self.routed = 0
         self.affinity_routed = 0        # landed on a host already caching the program
+        self.quarantine_skips = 0       # routes that filtered out >=1 open host
         # HRW preferred-set memo: keyed by artifact key, valid only for the
         # alive-membership it was computed against. At fleet scale the
         # per-route blake2b over every (key, host) pair dominates routing
@@ -454,6 +479,7 @@ class Scheduler:
         cache = HostArtifactCache(host_id, self.cfg, self.directory)
         cache.peer_lookup = self._peer_lookup
         cache.peer_chunks = self._peer_chunk_lookup
+        cache.breakers = self.breakers
         return cache
 
     # --------------------------------------------------------------- routing
@@ -474,6 +500,23 @@ class Scheduler:
             if strict:
                 return None
             candidates = alive                 # retry beats failing outright
+        probed: List[int] = []
+        if self.cfg.quarantine:
+            # breaker gate: OPEN hosts are quarantined out of routing;
+            # HALF_OPEN hosts admit a bounded number of probes ("probe"
+            # consumes a slot, released when the dispatcher records the
+            # outcome — or right below, if the probe host isn't chosen).
+            # If EVERY candidate is gated, fall back to the ungated set —
+            # quarantine degrades placement, never availability.
+            gates = {h.host_id: self.breakers.gate_host(h.host_id)
+                     for h in candidates}
+            probed = [hid for hid, g in gates.items() if g == "probe"]
+            healthy = [h for h in candidates if gates[h.host_id] != "blocked"]
+            if healthy and len(healthy) < len(candidates):
+                with self._lock:
+                    self.quarantine_skips += 1
+            if healthy:
+                candidates = healthy
         with self._lock:
             self._rr += 1
             rr = self._rr
@@ -504,6 +547,12 @@ class Scheduler:
             if cache is not None and cache.programs.contains(pkey):
                 with self._lock:
                     self.affinity_routed += 1
+        for hid in probed:
+            # half-open hosts we considered but did not pick get their probe
+            # slot back immediately — only the CHOSEN host's probe stays
+            # consumed (until the dispatcher records its outcome)
+            if hid != chosen.host_id:
+                self.breakers.release_probe_host(hid)
         return chosen
 
     def _preferred(self, pkey: str, alive_ids: List[int]) -> Set[int]:
@@ -596,6 +645,7 @@ class Scheduler:
             partial_in_flight += s["partial_in_flight"]
         with self._lock:
             routed, affinity_routed = self.routed, self.affinity_routed
+            quarantine_skips = self.quarantine_skips
         def rate(hits: int, misses: int) -> float:
             return hits / (hits + misses) if hits + misses else 0.0
         return {
@@ -611,6 +661,8 @@ class Scheduler:
             "partial_in_flight": partial_in_flight,
             "routed": routed,
             "affinity_routed": affinity_routed,
+            "quarantine_skips": quarantine_skips,
+            "breakers": self.breakers.summary(),
             "replicas": self.cfg.replicas,
             "affinity_weight": self.cfg.affinity_weight,
         }

@@ -25,11 +25,14 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import logging
 import threading
 from typing import Callable, List, Optional, Tuple
 
 from repro.core import metrics
 from repro.core.simclock import Clock
+
+log = logging.getLogger(__name__)
 
 
 class TimerEntry:
@@ -128,7 +131,8 @@ class DeadlineTimer:
             try:
                 entry.fn()
             except Exception:    # a bad callback must not kill the event loop
-                pass
+                log.exception("timer %s: callback %r raised; continuing",
+                              self.name, entry.fn)
 
         entry._event = self._clock.schedule(delay_s, fire)
         return entry
@@ -152,4 +156,5 @@ class DeadlineTimer:
             try:
                 entry.fn()
             except Exception:   # a bad callback must not kill the shared thread
-                pass
+                log.exception("timer %s: callback %r raised; continuing",
+                              self.name, entry.fn)

@@ -1,0 +1,596 @@
+"""The resilience layer: deadlines, retry budgets, breakers, quarantine,
+admission control, and integrity-verified restores.
+
+Unit tests pin the primitives in repro.core.resilience; the integration
+tests drive them through the real dispatcher/scheduler on a virtual clock
+(flaky host -> breaker opens -> quarantine -> half-open probe revives) and
+through the real restore path (a lying peer's chunks are re-hashed, dropped,
+and transparently re-fetched from the store — wrong bytes are never
+returned). The timer, boot-claim, and read-ahead backpressure regressions
+from this PR's satellites live here too.
+"""
+import logging
+import sys
+import threading
+import time
+import types
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.blobstore import (
+    ChunkIntegrityError,
+    ChunkStore,
+    delta_restore,
+)
+from repro.core.boot import (
+    ENGINE,
+    BootPlan,
+    Finalize,
+    Stage,
+    TRACK_PROGRAM,
+    TRACK_WEIGHTS,
+    streamed_device_put,
+)
+from repro.core.dispatcher import Dispatcher
+from repro.core.metrics import Timeline
+from repro.core.resilience import (
+    CLOSED,
+    OPEN,
+    AdmissionController,
+    AdmissionRejected,
+    BackoffPolicy,
+    BreakerBoard,
+    CircuitBreaker,
+    Deadline,
+    DeadlineExceeded,
+    ResilienceConfig,
+    RetryBudget,
+)
+from repro.core.scheduler import CacheDirectory, HostArtifactCache, SchedulerConfig
+from repro.core.simclock import VirtualClock
+from repro.core.snapshot import SnapshotStore
+from repro.core.timerwheel import DeadlineTimer
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT))
+
+from benchmarks.bench_scale import SimCluster, XlaRuntimeError  # noqa: E402
+
+
+# ------------------------------------------------------------------ deadlines
+
+
+def test_deadline_remaining_expired_and_check_on_virtual_clock():
+    clock = VirtualClock()
+    d = Deadline.after(1.0, clock=clock)
+    assert d.remaining() == pytest.approx(1.0)
+    assert not d.expired()
+    d.check("early")                                   # no raise while live
+    clock.run_until(1.5)
+    assert d.expired()
+    assert d.remaining() == pytest.approx(-0.5)
+    with pytest.raises(DeadlineExceeded, match="at boot"):
+        d.check("boot")
+
+
+def test_backoff_grows_caps_and_jitters_deterministically():
+    import random
+
+    p = BackoffPolicy(base_s=0.1, factor=2.0, cap_s=0.5, jitter=0.5)
+    rng = random.Random(0)
+    delays = [p.delay(n, rng) for n in range(6)]
+    raw = [min(0.5, 0.1 * 2.0 ** n) for n in range(6)]
+    for d, r in zip(delays, raw):
+        assert r * 0.5 <= d <= r                       # jitter only shrinks
+    assert delays[-1] <= 0.5                           # capped
+    rng2 = random.Random(0)                            # same seed, same delays
+    assert delays == [p.delay(n, rng2) for n in range(6)]
+
+
+def test_retry_budget_floor_deposits_and_denial():
+    b = RetryBudget(fraction=0.5, floor=2.0, cap=3.0)
+    assert b.try_spend() and b.try_spend()             # the always-there floor
+    assert not b.try_spend()
+    assert b.denied == 1
+    for _ in range(10):
+        b.deposit()                                    # 10 x 0.5, capped at 3
+    assert b.tokens == pytest.approx(3.0)
+    assert all(b.try_spend() for _ in range(3))
+    assert not b.try_spend()
+    assert b.deposits == 10 and b.spent == 5
+
+
+# ------------------------------------------------------------------- breakers
+
+
+def test_breaker_opens_after_consecutive_failures_and_probe_revives():
+    t = [0.0]
+    br = CircuitBreaker(failures=3, cooldown_s=10.0, probes=1,
+                        now_fn=lambda: t[0])
+    assert br.state == CLOSED and br.allow()
+    br.record_failure()
+    br.record_success()                                # success resets streak
+    br.record_failure()
+    br.record_failure()
+    assert br.state == CLOSED
+    br.record_failure()                                # third consecutive
+    assert br.state == OPEN and br.opens == 1
+    assert not br.allow()                              # cooling down
+    t[0] = 10.1
+    assert br.gate() == "probe"                        # half-open: one slot
+    assert not br.allow()                              # slots exhausted
+    br.record_success()
+    assert br.state == CLOSED and br.probe_revivals == 1
+
+
+def test_breaker_probe_failure_reopens_for_a_fresh_cooldown():
+    t = [0.0]
+    br = CircuitBreaker(failures=1, cooldown_s=10.0, probes=1,
+                        now_fn=lambda: t[0])
+    br.record_failure()
+    assert br.state == OPEN
+    t[0] = 10.1
+    assert br.allow()                                  # the probe
+    br.record_failure()                                # probe failed
+    assert br.state == OPEN and br.opens == 2
+    assert not br.allow()                              # new cooldown from now
+    t[0] = 20.2
+    assert br.allow()
+
+
+def test_breaker_release_probe_returns_the_unused_slot():
+    t = [0.0]
+    br = CircuitBreaker(failures=1, cooldown_s=1.0, probes=1,
+                        now_fn=lambda: t[0])
+    br.record_failure()
+    t[0] = 1.1
+    assert br.gate() == "probe"
+    assert br.gate() == "blocked"                      # slot taken
+    br.release_probe()                                 # considered, not chosen
+    assert br.gate() == "probe"                        # slot handed back
+
+
+def test_breaker_board_allows_unknown_targets_without_materializing():
+    board = BreakerBoard()
+    assert board.allow("host:9")
+    assert board.summary()["targets"] == 0             # never materialized
+    board.record("host:9", False)
+    assert board.summary()["targets"] == 1
+
+
+def test_breaker_board_bind_clock_retrofits_existing_breakers():
+    board = BreakerBoard(failures=1, cooldown_s=5.0)
+    board.breaker("host:0")                            # materialized pre-bind
+    clock = VirtualClock()
+    board.bind_clock(clock)
+    board.record_host(0, ok=False)
+    assert not board.allow_host(0)
+    assert board.summary()["open_now"] == ["host:0"]
+    clock.run_until(5.1)                               # cooldown on NEW clock
+    assert board.allow_host(0)
+    assert board.summary()["half_open_now"] == ["host:0"]
+
+
+# ------------------------------------------------------------------ admission
+
+
+def test_admission_brownout_enters_and_exits_with_hysteresis():
+    cfg = ResilienceConfig(brownout_hi=2.0, brownout_lo=1.0)
+    adm = AdmissionController(cfg, capacity_slots=2)
+    for _ in range(4):
+        adm.try_admit()
+    assert not adm.brownout
+    adm.try_admit()                                    # sees 4 >= 2 x 2
+    assert adm.brownout
+    assert adm.summary()["brownout_entries"] == 1.0
+    adm.release()
+    adm.release()
+    assert adm.brownout                                # 3 > 2: still browned
+    adm.release()                                      # 2 <= 2 x 1.0: exit
+    assert not adm.brownout
+
+
+def test_admission_sheds_expired_deadline_even_when_idle():
+    clock = VirtualClock()
+    adm = AdmissionController(ResilienceConfig(), capacity_slots=4)
+    with pytest.raises(AdmissionRejected):
+        adm.try_admit(Deadline.after(0.0, clock=clock))
+    assert adm.summary()["shed"] == 1.0
+    adm.try_admit(Deadline.after(10.0, clock=clock))   # feasible: admitted
+    assert adm.summary()["admitted"] == 1.0
+
+
+def test_admission_brownout_sheds_below_observed_service_time():
+    clock = VirtualClock()
+    cfg = ResilienceConfig(brownout_hi=1.0, brownout_lo=0.0)
+    adm = AdmissionController(cfg, capacity_slots=1)
+    adm.try_admit()
+    adm.try_admit()                                    # 1 >= 1: brownout
+    assert adm.brownout
+    adm.release(2.0)                                   # observed e2e: 2 s
+    with pytest.raises(AdmissionRejected, match="brownout"):
+        adm.try_admit(Deadline.after(1.0, clock=clock))
+    adm.try_admit(Deadline.after(5.0, clock=clock))    # beats the ewma: in
+    assert adm.summary()["shed"] == 1.0
+
+
+# ------------------------------------- timer survives raising callbacks (sat 1)
+
+
+def test_timer_survives_raising_callback_real_clock(caplog):
+    timer = DeadlineTimer("resilience-test-real")
+    fired = threading.Event()
+
+    def bad():
+        raise ValueError("boom")
+
+    with caplog.at_level(logging.ERROR, logger="repro.core.timerwheel"):
+        timer.schedule(0.01, bad)
+        timer.schedule(0.03, fired.set)
+        assert fired.wait(5.0)                         # worker outlived `bad`
+    timer.close()
+    assert any("raised; continuing" in r.getMessage() for r in caplog.records)
+
+
+def test_timer_survives_raising_callback_virtual_clock(caplog):
+    clock = VirtualClock()
+    timer = DeadlineTimer("resilience-test-virtual", clock=clock)
+    fired = []
+
+    def bad():
+        raise ValueError("boom")
+
+    timer.schedule(0.1, bad)
+    timer.schedule(0.2, lambda: fired.append(1))
+    with caplog.at_level(logging.ERROR, logger="repro.core.timerwheel"):
+        clock.run_until_idle()                         # event loop must survive
+    timer.close()
+    assert fired == [1]
+    assert any("raised; continuing" in r.getMessage() for r in caplog.records)
+
+
+# ---------------------------------------------- boot: claim + deadlines (sat 2)
+
+
+class _SleepStage(Stage):
+    def __init__(self, name, track, seconds, sets=()):
+        self.name, self.track, self.seconds, self.sets = name, track, seconds, sets
+
+    def run(self, ctx):
+        time.sleep(self.seconds)
+        for attr, value in self.sets:
+            setattr(ctx, attr, value)
+
+
+def _fake_dep():
+    return types.SimpleNamespace(image=types.SimpleNamespace(key="img-res"))
+
+
+def test_boot_claim_timeout_names_last_completed_stage():
+    release = threading.Event()
+
+    class _Blocked(Stage):
+        name, track = "restore_weights_host", TRACK_WEIGHTS
+
+        def run(self, ctx):
+            ctx.params = {}
+            release.wait(10.0)
+
+    plan = BootPlan([
+        _SleepStage("deserialize_program", TRACK_PROGRAM, 0.0,
+                    sets=[("program", lambda p, t: t)]),
+        _Blocked(),
+        Finalize(),
+    ])
+    handle = ENGINE.launch(plan, _fake_dep(), driver_name="t")
+    try:
+        with pytest.raises(TimeoutError,
+                           match="last completed stage: deserialize_program"):
+            handle.claim(timeout=0.3)
+    finally:
+        release.set()
+    for _ in range(200):
+        if handle.done():
+            break
+        time.sleep(0.01)
+    handle.cancel()                                    # dispose the executor
+
+
+def test_agent_claim_timeout_is_configurable():
+    from repro.core.agent import Agent
+    from repro.core.metrics import Recorder, ResidencyTracker
+
+    agent = Agent(Recorder(), ResidencyTracker(), claim_timeout_s=0.25)
+    assert agent.claim_timeout_s == 0.25
+
+
+def test_deadline_aborts_boot_at_stage_boundary():
+    tl = Timeline()
+    tl.deadline = Deadline.after(0.05)
+    plan = BootPlan([
+        _SleepStage("deserialize_program", TRACK_PROGRAM, 0.0,
+                    sets=[("program", lambda p, t: t)]),
+        _SleepStage("restore_weights_host", TRACK_WEIGHTS, 0.15,
+                    sets=[("params", {})]),
+        _SleepStage("restore_weights_device", TRACK_WEIGHTS, 0.0),
+        Finalize(),
+    ])
+    with pytest.raises(DeadlineExceeded, match="restore_weights_device"):
+        ENGINE.execute(plan, _fake_dep(), tl, driver_name="t")
+
+
+# --------------------------------------- streamed put: backpressure (sat 3)
+
+
+def test_streamed_device_put_backpressure_never_drops_chunks(monkeypatch):
+    """prefetch=1 queue + a consumer slower than the producer: every put hits
+    queue.Full and must retry, never drop. Exact equality of every leaf is
+    the proof — a silently dropped chunk would leave a None/stale leaf."""
+    tree = {f"leaf{i:02d}": np.full(64, i, np.float32) for i in range(12)}
+    real_put = jax.device_put
+
+    def slow_put(x, *args, **kwargs):
+        time.sleep(0.12)                   # > the producer's 0.1 s put timeout
+        return real_put(x, *args, **kwargs)
+
+    monkeypatch.setattr(jax, "device_put", slow_put)
+    out = streamed_device_put(tree, chunk_bytes=256, prefetch=1)
+    for key, val in tree.items():
+        np.testing.assert_array_equal(np.asarray(out[key]), val)
+
+
+def test_streamed_device_put_aborts_mid_stream_on_deadline(monkeypatch):
+    tree = {f"leaf{i}": np.full(32, i, np.float32) for i in range(8)}
+    real_put = jax.device_put
+
+    def slow_put(x, *args, **kwargs):
+        time.sleep(0.05)
+        return real_put(x, *args, **kwargs)
+
+    monkeypatch.setattr(jax, "device_put", slow_put)
+    with pytest.raises(DeadlineExceeded, match="device stream"):
+        streamed_device_put(tree, chunk_bytes=128, prefetch=1,
+                            deadline=Deadline.after(0.08))
+
+
+# -------------------------------------------------- integrity-verified restores
+
+
+def _tree(seed=0, n=6, leaf_bytes=256):
+    rng = np.random.default_rng(seed)
+    return {f"layer{i}": rng.standard_normal(leaf_bytes // 8)
+            for i in range(n)}
+
+
+def test_chunkstore_get_raises_on_persistent_corruption(tmp_path):
+    store = ChunkStore(tmp_path, chunk_bytes=64)
+    cid = store.put(b"x" * 64)
+    store._path(cid).write_bytes(b"y" * 64)            # rot the stored bytes
+    with pytest.raises(ChunkIntegrityError):
+        store.get(cid)
+    assert store.integrity_failures == 1
+    assert store.get(cid, verify=False) == b"y" * 64   # explicit escape hatch
+
+
+def _paired_caches():
+    cfg = SchedulerConfig()
+    directory = CacheDirectory()
+    warm = HostArtifactCache(0, cfg, directory)
+    cold = HostArtifactCache(1, cfg, directory)
+    return warm, cold, {0: warm, 1: cold}
+
+
+def test_delta_restore_refetches_poisoned_peer_chunks(tmp_path):
+    warm, cold, by_id = _paired_caches()
+
+    def lying_peer(key, cids, requester):
+        got = {}
+        for hid, cache in by_id.items():
+            if hid != requester:
+                got.update(cache.snapshots.chunks_for(cids))
+        # every byte the peer serves is garbage of the right length
+        return {cid: b"\x00" * len(data) for cid, data in got.items()}
+
+    warm.peer_chunks = cold.peer_chunks = lying_peer
+    blobs = ChunkStore(tmp_path / "blobs", chunk_bytes=64)
+    store = SnapshotStore(tmp_path / "snaps", blobs=blobs)
+    tree = _tree()
+    store.save("v1", tree)
+    delta_restore(store, "v1", warm)                   # host 0 publishes v1
+
+    got, stats = delta_restore(store, "v1", cold)      # peer serves only lies
+    for key, val in tree.items():                      # NEVER the wrong bytes
+        np.testing.assert_array_equal(np.asarray(got[key]), np.asarray(val))
+    assert stats.chunks_refetched > 0
+    assert stats.chunks_rehashed >= stats.chunks_refetched
+    assert stats.bytes_from_peer == 0                  # lies un-accounted
+    assert stats.bytes_from_store == stats.bytes_total
+
+
+def test_peer_breaker_opens_after_repeated_lying(tmp_path):
+    warm, cold, by_id = _paired_caches()
+    board = BreakerBoard(failures=2, cooldown_s=60.0)
+    warm.breakers = cold.breakers = board
+
+    def lying_peer(key, cids, requester):
+        got = {}
+        for hid, cache in by_id.items():
+            if hid != requester:
+                got.update(cache.snapshots.chunks_for(cids))
+        return {cid: b"\x00" * len(data) for cid, data in got.items()}
+
+    warm.peer_chunks = cold.peer_chunks = lying_peer
+    blobs = ChunkStore(tmp_path / "blobs", chunk_bytes=64)
+    store = SnapshotStore(tmp_path / "snaps", blobs=blobs)
+    trees = {f"v{i}": _tree(seed=i) for i in range(3)}
+    for key, tree in trees.items():
+        store.save(key, tree)
+        delta_restore(store, key, warm)                # host 0 holds them all
+
+    delta_restore(store, "v0", cold)                   # lie #1: recorded
+    delta_restore(store, "v1", cold)                   # lie #2: breaker opens
+    assert not board.allow("peer")
+    got, stats = delta_restore(store, "v2", cold)      # peer tier bypassed
+    for key, val in trees["v2"].items():
+        np.testing.assert_array_equal(np.asarray(got[key]), np.asarray(val))
+    assert stats.bytes_from_peer == 0
+    assert stats.chunks_refetched == 0                 # nothing to drop
+    assert cold.peer_fetches == 2                      # v2 never asked a peer
+
+
+# ------------------------------------------- dispatcher integration (virtual)
+
+
+class _StubAgent:
+    """Scale-harness agent stand-in: fixed charge, outcome scripted per host."""
+
+    def __init__(self, clock, outcome, charge_s=0.01):
+        self.clock = clock
+        self.outcome = outcome
+        self.charge_s = charge_s
+        self.calls = []
+
+    def handle(self, host, dep, tokens, driver_name, tl, label=None,
+               preboot=None):
+        self.calls.append(host.host_id)
+        host.charge(self.charge_s)
+        t0 = self.clock.now()
+        tl.t_dispatch = tl.t_start_begin = tl.t_exec_begin = t0
+        tl.t_done = t0 + self.charge_s
+        return self.outcome(host)
+
+
+def test_flaky_host_quarantined_then_probe_revived():
+    clock = VirtualClock()
+    cluster = SimCluster(clock, n_hosts=2, slots_per_host=2,
+                         scheduler=SchedulerConfig(breaker_failures=3,
+                                                   breaker_cooldown_s=5.0))
+    flaky_hosts = {0}
+
+    def outcome(host):
+        if host.host_id in flaky_hosts:
+            raise XlaRuntimeError("flaky host")
+        return "ok"
+
+    agent = _StubAgent(clock, outcome)
+    disp = Dispatcher(cluster, agent, hedging=False, max_retries=4,
+                      clock=clock)
+    board = cluster.scheduler.breakers
+
+    def settle_one():
+        fut = disp.submit(None, [1], "sim")
+        clock.run_until_idle()
+        assert fut.result(timeout=0) == "ok"           # retries route around
+
+    for _ in range(40):
+        settle_one()
+        if board.breaker("host:0").state == OPEN:
+            break
+    else:
+        pytest.fail("host:0 breaker never opened")
+
+    mark = len(agent.calls)
+    for _ in range(5):
+        settle_one()
+    assert 0 not in agent.calls[mark:]                 # quarantined out
+    assert cluster.scheduler.quarantine_skips >= 5
+
+    flaky_hosts.clear()                                # the host heals
+    clock.run_until(clock.now() + 5.1)                 # cooldown passes
+    for _ in range(10):
+        settle_one()
+        if board.breaker("host:0").state == CLOSED:
+            break
+    else:
+        pytest.fail("half-open probe never revived host 0")
+    assert board.summary()["probe_revivals"] >= 1
+    assert 0 in agent.calls[mark + 5:]                 # back in rotation
+    disp.close()
+
+
+def test_retry_budget_bounds_attempt_amplification():
+    clock = VirtualClock()
+    cluster = SimCluster(clock, n_hosts=2, slots_per_host=2)
+    agent = _StubAgent(clock, lambda host: (_ for _ in ()).throw(
+        XlaRuntimeError("always down")))
+    res = ResilienceConfig(retry_fraction=0.0, retry_floor=2.0,
+                           backoff=BackoffPolicy(base_s=0.001, jitter=0.0))
+    disp = Dispatcher(cluster, agent, hedging=False, max_retries=8,
+                      clock=clock, resilience=res)
+    futs = [disp.submit(None, [1], "sim") for _ in range(4)]
+    clock.run_until_idle()
+    disp.close()
+    for fut in futs:
+        with pytest.raises(XlaRuntimeError):
+            fut.result(timeout=0)                      # settled exactly once
+    assert disp.submitted == 4
+    assert disp.retries == 2                           # the floor, no more
+    assert disp.attempts == 4 + 2                      # amplification bounded
+    assert disp.retries_denied == 4
+    assert disp.retry_budget.denied == 4
+
+
+def test_infeasible_retry_is_denied_not_scheduled():
+    clock = VirtualClock()
+    cluster = SimCluster(clock, n_hosts=2, slots_per_host=2)
+    agent = _StubAgent(clock, lambda host: (_ for _ in ()).throw(
+        XlaRuntimeError("crash")))
+    res = ResilienceConfig(backoff=BackoffPolicy(base_s=1.0, factor=2.0,
+                                                 cap_s=10.0, jitter=0.0))
+    disp = Dispatcher(cluster, agent, hedging=False, max_retries=5,
+                      clock=clock, resilience=res)
+    fut = disp.submit(None, [1], "sim",
+                      deadline=Deadline.after(0.5, clock=clock))
+    clock.run_until_idle()
+    disp.close()
+    # the 1 s backoff cannot fit in the 0.5 s budget: the retry is refused
+    # and the ORIGINAL error settles (no zombie attempt past the deadline)
+    with pytest.raises(XlaRuntimeError):
+        fut.result(timeout=0)
+    assert disp.retries == 0
+    assert disp.retries_denied == 1
+    assert len(agent.calls) == 1
+
+
+def test_expired_deadline_settles_without_dispatch():
+    clock = VirtualClock()
+    cluster = SimCluster(clock, n_hosts=1, slots_per_host=1)
+    agent = _StubAgent(clock, lambda host: "ok")
+    disp = Dispatcher(cluster, agent, hedging=False, clock=clock)
+    fut = disp.submit(None, [1], "sim",
+                      deadline=Deadline.after(0.0, clock=clock))
+    clock.run_until_idle()
+    disp.close()
+    with pytest.raises(DeadlineExceeded):
+        fut.result(timeout=0)
+    assert agent.calls == []                           # never reached a host
+
+
+# ------------------------------------------------------ gateway front door
+
+
+def test_gateway_sheds_via_admission_and_reports(gateway):
+    gw, spec = gateway
+    gw.admission = AdmissionController(ResilienceConfig(), capacity_slots=4)
+    try:
+        fut = gw.invoke_async(spec.name, deadline_s=0.0)
+        with pytest.raises(AdmissionRejected):
+            fut.result(timeout=1)
+        assert gw.resilience_summary()["admission"]["shed"] == 1.0
+        out = gw.invoke(spec.name, deadline_s=60.0)    # feasible: serves
+        assert out is not None
+        assert gw.resilience_summary()["admission"]["admitted"] == 1.0
+    finally:
+        gw.admission = None                            # shared session fixture
+
+
+def test_gateway_deadline_propagates_to_dispatch(gateway):
+    gw, spec = gateway
+    # the sub-ms budget dies at the first checkpoint it reaches — the
+    # dispatcher's pre-attempt gate or the agent's dispatch check; either
+    # way the request settles DeadlineExceeded instead of booting anything
+    with pytest.raises(DeadlineExceeded, match="deadline"):
+        gw.invoke(spec.name, deadline_s=1e-6, timeout=60)

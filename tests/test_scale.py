@@ -425,3 +425,62 @@ def test_bench_cli_writes_report_and_gates(tmp_path):
     assert data["churn"]["adds"] >= 1
     assert data["latency_ms"]["p999"] >= data["latency_ms"]["p50"] > 0
     assert data["clock"]["virtual_s"] > data["wall_s"]  # faster than real time
+
+
+# ------------------------------------------------- resilience chaos windows
+
+
+def test_slow_store_window_every_request_settles():
+    """A 4x global-store slowdown covering half the run stretches restores
+    but must not lose, fail, or double-settle a single request."""
+    n = 2000
+    cfg = ScaleConfig(n_requests=n, n_hosts=10, slots_per_host=4,
+                      rate_rps=500.0, n_functions=8, seed=11,
+                      slo_ms=60_000.0)
+    cfg.chaos = [{"t": cfg.duration_s * 0.2, "op": "store_slow",
+                  "factor": 4.0, "duration": cfg.duration_s * 0.5}]
+    result = run_scale(cfg)
+    r = result["requests"]
+    assert r["submitted"] == r["settled"] == n
+    assert r["unsettled"] == 0
+    assert r["failed"] == 0, r["failures_sample"]
+    assert r["residual_load"] == 0
+
+
+def test_corrupt_chunk_window_never_serves_bad_bytes():
+    """With EVERY peer chunk corrupted for 60% of the run, re-hashing must
+    catch each lie and re-fetch from the store: zero corrupt restores served,
+    while every request still settles exactly once."""
+    n = 2000
+    cfg = ScaleConfig(n_requests=n, n_hosts=10, slots_per_host=4,
+                      rate_rps=500.0, n_functions=8, seed=12,
+                      slo_ms=60_000.0, resilience=True, deadline_s=30.0)
+    cfg.chaos = [{"t": cfg.duration_s * 0.2, "op": "corrupt_chunks",
+                  "p": 1.0, "duration": cfg.duration_s * 0.6}]
+    result = run_scale(cfg)
+    r = result["requests"]
+    assert r["submitted"] == r["settled"] == n
+    assert r["unsettled"] == 0
+    assert r["residual_load"] == 0
+    res = result["resilience"]
+    assert res["corrupt_served"] == 0
+    assert res["chunks_refetched"] >= 1                # the window did bite
+    assert res["chunks_rehashed"] >= res["chunks_refetched"]
+    assert res["attempt_amplification"] <= 2.0
+
+
+def test_bench_cli_resilience_writes_report_and_gates(tmp_path):
+    out = tmp_path / "bench_resilience.json"
+    rc = bench_main(["--requests", "4000", "--hosts", "10", "--rate", "500",
+                     "--functions", "8", "--resilience", "--out", str(out)])
+    assert rc == 0
+    data = json.loads(out.read_text())
+    assert data["bench"] == "resilience_chaos"
+    assert data["requests"]["unsettled"] == 0
+    res = data["resilience"]
+    assert res["corrupt_served"] == 0
+    assert res["attempt_amplification"] <= 2.0
+    assert res["breakers"]["opens"] >= 1
+    assert res["breakers"]["probe_revivals"] >= 1
+    assert res["quarantine_skips"] >= 1
+    assert res["chunks_refetched"] >= 1
