@@ -101,8 +101,12 @@ def streamed_ttfr_comparison(gw, out_path=None,
     stage_breakdown(gw, label, "unikernel_stream_cold")
 
     data = {
-        "schema_version": 1,
+        "schema_version": 2,
         "bench": "startup_stream",
+        # config-derived (never a timestamp): runs of the same spec compare,
+        # anything else is apples-to-oranges and tools/check_bench.py skips it
+        "run_id": f"startup-stream-{spec.name}",
+        "seed": 0,                      # single deterministic spec, no RNG knob
         "spec": spec.name,
         "split_ok": bool(dep.split_ok),
         "first_use_order_len": len(dep.first_use_order),
@@ -110,6 +114,12 @@ def streamed_ttfr_comparison(gw, out_path=None,
                          head_wall_ms=head_wall_s * 1e3,
                          t_first_ready_stamped=tl.t_first_ready > 0.0),
         "ratio_full_wall_over_ttfr": ratio,
+        # wall-clock measurement on shared CI runners — tolerance is wide;
+        # the hard floor is the gate below, not the regression delta
+        "headline": {
+            "ratio_full_wall_over_ttfr": {
+                "value": ratio, "better": "higher", "rel_tol": 0.35},
+        },
         "gate": {"threshold": TTFR_GATE_RATIO,
                  "passed": bool(ratio >= TTFR_GATE_RATIO)},
     }

@@ -279,6 +279,34 @@ def resilience_table() -> str:
     return "\n".join(rows)
 
 
+def forecast_table() -> str:
+    """Forecast-driven pre-boot vs reactive pool policy (one row per cell),
+    from the ``BENCH_*_forecast.json`` report(s) that ``bench_scale.py
+    --forecast`` writes at the repo root."""
+    import json
+    reports = sorted(ROOT.glob("BENCH_*_forecast.json"))
+    if not reports:
+        return "(run benchmarks/bench_scale.py --forecast to populate)"
+    rows = ["| policy | cold rate | cold | warm | wasted warm s | cooldowns "
+            "| pre-boots | p99 ms | forecast MAE | bias | gate |",
+            "|---|" + "---|" * 10]
+    for path in reports:
+        d = json.loads(path.read_text())
+        best, ok = d["gate"]["best"], d["gate"]["ok"]
+        for policy, c in sorted(d["cells"].items()):
+            err = c.get("forecast_error") or {}
+            mae = f"{err['mae']:.2f}" if err else "—"
+            bias = f"{err['bias']:+.2f}" if err else "—"
+            gate = ("pass" if ok else "FAIL") if policy == best else ""
+            rows.append(
+                f"| {policy} | {c['cold_start_rate']:.4f} "
+                f"| {c['cold_starts']} | {c['warm_hits']} "
+                f"| {c['wasted_warm_seconds']:.1f} | {c['cooldowns']} "
+                f"| {c['prewarm_boots']} | {c['latency_ms']['p99']:.1f} "
+                f"| {mae} | {bias} | {gate} |")
+    return "\n".join(rows)
+
+
 def variants_table() -> str:
     recs = [r for r in load_records(variant=None) if r["variant"] != "baseline"]
     if not recs:
@@ -326,6 +354,10 @@ SKELETON = """# Experiments
 
 <!-- RESILIENCE_TABLE -->
 
+## Forecast-driven pre-boot vs reactive pools
+
+<!-- FORECAST_TABLE -->
+
 ## Multi-pod dry run
 
 <!-- DRYRUN_TABLE -->
@@ -351,6 +383,8 @@ TABLES = (
     ("PLACEMENT_TABLE", "Placement under multi-host load", placement_table),
     ("SCALE_TABLE", "Scale/chaos under virtual time", scale_table),
     ("RESILIENCE_TABLE", "Resilience under chaos", resilience_table),
+    ("FORECAST_TABLE", "Forecast-driven pre-boot vs reactive pools",
+     forecast_table),
     ("DRYRUN_TABLE", "Multi-pod dry run", dryrun_table),
     ("ROOFLINE_TABLE", "Roofline", roofline_table),
     ("VARIANTS_TABLE", "Variants", variants_table),

@@ -66,7 +66,7 @@ class WarmPoolAutoscaler:
     def __init__(self, cluster: Cluster, deployments: Dict[str, Deployment], *,
                  interval_s: float = 0.25, idle_timeout_s: float = 5.0,
                  headroom: float = 1.5, max_pool: int = 8,
-                 clock: Optional[Clock] = None) -> None:
+                 clock: Optional[Clock] = None, planner=None) -> None:
         self.mode = "warm"
         self.cluster = cluster
         self.deployments = deployments
@@ -74,6 +74,11 @@ class WarmPoolAutoscaler:
         self.idle_timeout_s = idle_timeout_s
         self.headroom = headroom
         self.max_pool = max_pool
+        # a PreBootPlanner (repro.core.forecast): when set, its published
+        # pool targets REPLACE the reactive Little's-law + idle-timeout math —
+        # including target zero (full cooldown) the moment the forecast says
+        # traffic is gone, instead of idle_timeout_s after it actually stops
+        self.planner = planner
         self._clock = clock if clock is not None else metrics.get_clock()
         self._now = self._clock.now
         self._arrivals: Dict[str, List[float]] = {}
@@ -100,8 +105,17 @@ class WarmPoolAutoscaler:
             self._service[fn_name] = 0.8 * prev + 0.2 * seconds     # EWMA
 
     # ---------------------------------------------------------------- control
+    def service_time_estimate(self, fn_name: str) -> float:
+        """EWMA service time (the planner's Little's-law input)."""
+        with self._lock:
+            return self._service.get(fn_name, 0.05)
+
     def target(self, fn_name: str) -> int:
         """Little's law: concurrency = arrival_rate x service_time, with headroom."""
+        if self.planner is not None:
+            planned = self.planner.pool_target(fn_name)
+            if planned is not None:
+                return min(planned, self.max_pool)
         # ONE timestamp for both the idle check and the rate window — two
         # now() reads used to skew the window against the idle cutoff
         t = self._now()

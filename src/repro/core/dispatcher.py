@@ -130,6 +130,17 @@ class Dispatcher:
             if hasattr(cluster, "scheduler") else None
         if self._breakers is not None:
             self._breakers.bind_clock(self._clock)
+        # a PreBootPlanner (repro.core.forecast) parks forecast-driven boots
+        # per (host, image); when set, _attempt claims a parked boot before
+        # launching its own request-triggered speculation — a request landing
+        # where the planner already warmed rides the planner's boot for free
+        self.planner = None
+
+    @property
+    def timer(self) -> DeadlineTimer:
+        """The shared deadline timer (hedge deadlines, retry backoffs — and
+        the forecast planner's tick, which rides the same thread)."""
+        return self._hedge_timer
 
     # ------------------------------------------------------------------ public
     def submit(self, dep: Optional[Deployment], tokens, driver_name: str,
@@ -308,14 +319,21 @@ class Dispatcher:
             return False
 
         preboot = None
-        if speculative and dep is not None:
+        if self.planner is not None and image is not None and bucket_rows is None:
+            # forecast fast path: a parked planner boot for this (host, image)
+            # beats starting our own — the boot has a head start of up to one
+            # planning horizon
+            preboot = self.planner.claim(host.host_id, image.key)
+            if preboot is not None:
+                tl.planner_preboot = True
+        if preboot is None and speculative and dep is not None:
             preboot = self._preboot(
                 host, dep, driver_name,
                 bucket_rows=batch.padded_rows if batch is not None else None)
-            if preboot is not None:
-                # whichever attempt settles the request first, an unclaimed
-                # speculative boot must die with its executor
-                result.add_done_callback(lambda _f: preboot.cancel())
+        if preboot is not None:
+            # whichever attempt settles the request first, an unclaimed
+            # speculative boot must die with its executor
+            result.add_done_callback(lambda _f: preboot.cancel())
 
         def work():
             if batch is not None:

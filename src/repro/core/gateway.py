@@ -28,16 +28,19 @@ from repro.core.agent import Agent
 from repro.core.artifact import FunctionSpec
 from repro.core.autoscaler import ColdOnlyScaler, WarmPoolAutoscaler
 from repro.core.batching import BatchingConfig, Coalescer
-from repro.core.blobstore import ChunkStore
+from repro.core.blobstore import ChunkStore, delta_restore
 from repro.core.cluster import Cluster
 from repro.core.compile_cache import CompileCache
 from repro.core.deploy import Deployment, deploy
 from repro.core.dispatcher import Dispatcher
+from repro.core.forecast import (ForecastConfig, PreBootPlanner, RateHistory,
+                                 make_forecaster)
 from repro.core.metrics import LatencyStats, Recorder, ResidencyTracker
+from repro.core.metrics import get_clock as _get_clock
 from repro.core.metrics import now as _default_now
 from repro.core.resilience import (AdmissionController, AdmissionRejected,
                                    Deadline, ResilienceConfig)
-from repro.core.scheduler import SchedulerConfig
+from repro.core.scheduler import ProgramArtifact, SchedulerConfig
 from repro.core.simclock import Clock
 from repro.core.snapshot import SnapshotStore
 
@@ -50,7 +53,8 @@ class Gateway:
                  scheduler: Optional[SchedulerConfig] = None,
                  clock: Optional[Clock] = None,
                  default_driver: Optional[str] = None,
-                 resilience: Union[bool, ResilienceConfig, None] = None) -> None:
+                 resilience: Union[bool, ResilienceConfig, None] = None,
+                 forecast: Union[bool, ForecastConfig, None] = None) -> None:
         assert mode in ("cold", "warm")
         self.mode = mode
         self._default_driver = default_driver
@@ -89,12 +93,34 @@ class Gateway:
             if self.admission is not None:
                 self.coalescer.brownout = lambda: self.admission.brownout
         self.deployments: Dict[str, Deployment] = {}
+        # forecast=True (or a ForecastConfig) turns on predictive pre-boot:
+        # a PreBootPlanner ticking on the dispatcher's shared timer predicts
+        # per-function arrivals, parks speculative boots + prefetches host
+        # tiers ahead of them, and publishes pool targets (zero = full
+        # cooldown) that replace the warm autoscaler's idle-timeout heuristic
+        self.forecast_cfg: Optional[ForecastConfig] = None
+        self.planner: Optional[PreBootPlanner] = None
+        if forecast:
+            self.forecast_cfg = forecast if isinstance(forecast, ForecastConfig) \
+                else ForecastConfig()
+            history = RateHistory(self.forecast_cfg,
+                                  clock if clock is not None else _get_clock())
+            self.planner = PreBootPlanner(
+                self.forecast_cfg, make_forecaster(self.forecast_cfg, history),
+                self.dispatcher.timer, clock=clock,
+                route=lambda image_key: self.cluster.route(image_key),
+                preboot=self._planner_preboot,
+                prefetch=self._planner_prefetch,
+                service_time=self._service_time_estimate)
+            self.dispatcher.planner = self.planner
         if mode == "warm":
             self.scaler = WarmPoolAutoscaler(self.cluster, self.deployments,
-                                             clock=clock)
+                                             clock=clock, planner=self.planner)
         else:
             self.scaler = ColdOnlyScaler()
         self.scaler.start()
+        if self.planner is not None:
+            self.planner.start()
         self._lock = threading.Lock()
 
     # ------------------------------------------------------------------ deploy
@@ -115,7 +141,40 @@ class Gateway:
                 dep.ensure_bucket(bucket * spec.batch_size)
         with self._lock:
             self.deployments[spec.name] = dep
+        if self.planner is not None:
+            self.planner.register(dep)
         return dep
+
+    # ------------------------------------------------------- planner hooks
+    def _planner_preboot(self, host, dep):
+        """Park a forecast-driven boot on ``host`` (None for drivers whose
+        starts are impure — the planner then only prefetches/targets)."""
+        return self.agent.preboot(host, dep, self.default_driver())
+
+    def _planner_prefetch(self, host, dep) -> bool:
+        """Warm ``host``'s artifact tiers ahead of a predicted arrival:
+        program payload into the program tier, snapshot chunks into the
+        chunk tier (a delta restore — only missing chunks move). Returns
+        True if any bytes actually shipped."""
+        cache = getattr(host, "cache", None)
+        if cache is None:
+            return False
+        moved = False
+        payload = dep.fetch_program_payload()
+        if payload is not None:
+            moved = cache.prefetch_program(
+                dep.program_key(), ProgramArtifact(payload), len(payload))
+        if not cache.snapshots.contains(dep.image.key):
+            try:
+                delta_restore(self.snapshots, dep.image.key, cache=cache)
+                moved = True
+            except Exception:
+                pass               # prefetch is advisory — the boot will pay
+        return moved
+
+    def _service_time_estimate(self, fn_name: str) -> float:
+        est = getattr(self.scaler, "service_time_estimate", None)
+        return est(fn_name) if est is not None else 0.05
 
     # ------------------------------------------------------------------ invoke
     def default_driver(self) -> str:
@@ -130,6 +189,8 @@ class Gateway:
         dep = self.deployments[fn_name]
         driver = driver or self.default_driver()
         self.scaler.observe_arrival(fn_name)
+        if self.planner is not None:
+            self.planner.observe_arrival(fn_name)
         if tokens is None:
             tokens = dep.example_tokens()
 
@@ -253,6 +314,13 @@ class Gateway:
             out["admission"] = self.admission.summary()
         return out
 
+    def forecast_summary(self) -> Optional[Dict[str, object]]:
+        """Planner health: model, pre-boots planned/claimed/expired, prefetch
+        and full-cooldown counts, and the forecast error (MAE/bias)."""
+        if self.planner is None:
+            return None
+        return self.planner.summary()
+
     def _account_exit(self, ex) -> None:
         self.residency.add_residency(ex.nbytes, ex.resident_seconds, ex.busy_seconds)
 
@@ -263,6 +331,10 @@ class Gateway:
             # wait for in-flight batches — no Future may be left dangling
             self.coalescer.drain()
             self.coalescer.close()
+        if self.planner is not None:
+            # cancel the planner tick + every parked pre-boot BEFORE the
+            # shared timer dies with the dispatcher
+            self.planner.stop()
         self.dispatcher.close()         # shared hedge-timer thread
         self.scaler.stop()
         for host in self.cluster.hosts:

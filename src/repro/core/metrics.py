@@ -195,6 +195,9 @@ class Timeline:
     t_first_ready: float = 0.0
     t_ttfr: float = 0.0
     preboot: bool = False            # boot ran speculatively while queued
+    # the speculation was FORECAST-driven: a PreBootPlanner parked this boot
+    # ahead of the predicted arrival and the dispatcher claimed it
+    planner_preboot: bool = False
     # coalescing: how many requests shared this executor's boot (1 = unbatched).
     # Member timelines of one batch share every stamp except t_enqueue, so
     # queue_wait stays per-request while startup/execution are the batch's.

@@ -1,0 +1,136 @@
+"""tools/check_bench.py: schema contract + regression gate, and the repo's
+own committed BENCH_*.json artifacts must satisfy it (the tier-1 side of the
+CI step — a malformed or regressed artifact fails before it merges)."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT))
+
+from tools.check_bench import (  # noqa: E402
+    check,
+    compare_headline,
+    validate_schema,
+)
+
+
+def _valid(**over):
+    data = {
+        "schema_version": 2,
+        "bench": "demo",
+        "run_id": "demo-16x4-seed0",
+        "seed": 0,
+        "headline": {
+            "p99_ms": {"value": 50.0, "better": "lower", "rel_tol": 0.25},
+            "hit_rate": {"value": 0.9, "better": "higher", "rel_tol": 0.10},
+        },
+    }
+    data.update(over)
+    return data
+
+
+# ------------------------------------------------------------------ schema
+
+def test_valid_artifact_passes():
+    assert validate_schema(_valid(), "x.json") == []
+
+
+@pytest.mark.parametrize("mutate", [
+    {"schema_version": 1},
+    {"bench": ""},
+    {"run_id": None},
+    {"seed": "0"},
+    {"headline": {}},
+    {"headline": {"m": {"value": float("nan"), "better": "lower",
+                        "rel_tol": 0.1}}},
+    {"headline": {"m": {"value": 1.0, "better": "sideways", "rel_tol": 0.1}}},
+    {"headline": {"m": {"value": 1.0, "better": "lower", "rel_tol": 2.0}}},
+])
+def test_schema_violations_are_reported(mutate):
+    assert validate_schema(_valid(**mutate), "x.json")
+
+
+# -------------------------------------------------------------- regression
+
+def test_within_tolerance_is_ok():
+    cur = _valid()
+    cur["headline"]["p99_ms"]["value"] = 60.0       # +20% < 25% tol
+    regressions, notes = compare_headline(cur, _valid(), "x.json")
+    assert regressions == [] and notes
+
+
+def test_lower_is_better_regression_fails():
+    cur = _valid()
+    cur["headline"]["p99_ms"]["value"] = 70.0       # +40% > 25% tol
+    regressions, _ = compare_headline(cur, _valid(), "x.json")
+    assert any("p99_ms" in r for r in regressions)
+
+
+def test_higher_is_better_regression_fails():
+    cur = _valid()
+    cur["headline"]["hit_rate"]["value"] = 0.5      # -44% > 10% tol
+    regressions, _ = compare_headline(cur, _valid(), "x.json")
+    assert any("hit_rate" in r for r in regressions)
+
+
+def test_dropped_headline_metric_fails():
+    cur = _valid()
+    del cur["headline"]["hit_rate"]
+    regressions, _ = compare_headline(cur, _valid(), "x.json")
+    assert any("disappeared" in r for r in regressions)
+
+
+def test_run_id_change_skips_comparison():
+    cur = _valid(run_id="demo-32x8-seed0")
+    cur["headline"]["p99_ms"]["value"] = 500.0      # would regress hard
+    regressions, notes = compare_headline(cur, _valid(), "x.json")
+    assert regressions == []
+    assert any("no comparison" in n for n in notes)
+
+
+def test_v1_baseline_skips_comparison():
+    regressions, notes = compare_headline(
+        _valid(), _valid(schema_version=1), "x.json")
+    assert regressions == []
+    assert any("no comparison" in n for n in notes)
+
+
+def test_baseline_rel_tol_is_the_bar():
+    """The committed baseline's tolerance governs — a PR can't widen its own
+    rel_tol to sneak a regression through."""
+    cur = _valid()
+    cur["headline"]["p99_ms"] = {"value": 70.0, "better": "lower",
+                                 "rel_tol": 0.99}
+    regressions, _ = compare_headline(cur, _valid(), "x.json")
+    assert any("p99_ms" in r for r in regressions)
+
+
+# --------------------------------------------------- repo + CLI integration
+
+def test_committed_bench_artifacts_validate():
+    """Every BENCH_*.json actually in the repo satisfies the v2 schema."""
+    problems = []
+    for path in sorted(ROOT.glob("BENCH_*.json")):
+        problems += validate_schema(json.loads(path.read_text()), path.name)
+    assert problems == []
+
+
+def test_check_walks_a_directory(tmp_path):
+    (tmp_path / "BENCH_1_demo.json").write_text(json.dumps(_valid()))
+    problems, _ = check(tmp_path, compare=False)
+    assert problems == []
+    (tmp_path / "BENCH_2_bad.json").write_text("{not json")
+    problems, _ = check(tmp_path, compare=False)
+    assert any("BENCH_2_bad" in p for p in problems)
+
+
+def test_cli_smoke():
+    out = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "check_bench.py"),
+         "--no-compare"],
+        capture_output=True, text=True, cwd=ROOT, timeout=60)
+    assert out.returncode == 0, out.stderr

@@ -1,0 +1,299 @@
+"""Forecast subsystem: history ring, forecasters, planner behavior.
+
+The regressions that shaped these tests:
+
+* ``RateHistory.window_rates`` used to treat a negative bucket index as
+  invalid — silently zeroing every warmup observation replayed at t < 0,
+  so the bench's 600 s warmup was a no-op and the EWMA cell entered the
+  eval untrained;
+* an EWMA level either tracks the seasonal wave (fast alpha) or inflates
+  through deseasonalization feedback (slow alpha), so the level is pinned
+  to the trailing one-period mean — these tests assert the recombined
+  forecast is unbiased on a known sinusoid;
+* planner cooldown (pool target 0 on predicted-quiet) replaces the idle
+  timeout — the planner must publish 0, count the transition, and never
+  leak a parked pre-boot.
+"""
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT))
+
+from benchmarks.traces import DiurnalPop, generate_trace  # noqa: E402
+from repro.core.forecast import (  # noqa: E402
+    EwmaSeasonalForecaster,
+    ForecastConfig,
+    ForecastError,
+    LearnedForecaster,
+    PreBootPlanner,
+    RateHistory,
+    ReactiveForecaster,
+    make_forecaster,
+)
+from repro.core.simclock import VirtualClock  # noqa: E402
+from repro.core.timerwheel import DeadlineTimer  # noqa: E402
+
+
+class FixedClock:
+    """now() is whatever the test last set (history reads pass t explicitly)."""
+
+    def __init__(self, t: float = 0.0) -> None:
+        self.t = t
+
+    def now(self) -> float:
+        return self.t
+
+
+def _cfg(**kw) -> ForecastConfig:
+    return ForecastConfig(**kw)
+
+
+# ------------------------------------------------------------- RateHistory
+
+def test_window_rates_reads_back_observed_buckets():
+    hist = RateHistory(_cfg(), FixedClock())
+    for t in (0.2, 0.7, 1.1, 2.5, 2.6, 2.7):
+        hist.observe("f", t=t)
+    # at t=3: buckets 0,1,2 closed with counts 2,1,3
+    np.testing.assert_allclose(hist.window_rates("f", 3, t=3.0),
+                               [2.0, 1.0, 3.0])
+    # the current (still-filling) bucket is excluded
+    hist.observe("f", t=3.4)
+    np.testing.assert_allclose(hist.window_rates("f", 3, t=3.5),
+                               [2.0, 1.0, 3.0])
+
+
+def test_window_rates_accepts_negative_time_buckets():
+    """Warmup traces replay at t < 0; a negative bucket index is data, not
+    out-of-range (the regression: ``j < 0`` zeroed all warmup history)."""
+    hist = RateHistory(_cfg(), FixedClock())
+    for k in range(10):
+        hist.observe("f", t=-10.0 + k + 0.5)        # one per bucket -10..-1
+    rates = hist.window_rates("f", 10, t=0.0)
+    np.testing.assert_allclose(rates, np.ones(10))
+    assert hist.current_rate("f", window_s=2.0, t=0.0) == 1.0
+
+
+def test_window_rates_quiet_gap_reads_zero():
+    hist = RateHistory(_cfg(), FixedClock())
+    hist.observe("f", t=0.5)
+    np.testing.assert_allclose(hist.window_rates("f", 3, t=5.0),
+                               [0.0, 0.0, 0.0])
+
+
+# ------------------------------------------------------------- forecasters
+
+def _replay(fc, hist, fn, trace, shift):
+    """The bench's warmup protocol: init, observe shifted, fold."""
+    fc.predict_rate(fn, t=-shift)
+    for t, name in trace:
+        if name == fn:
+            hist.observe(fn, t=t - shift)
+    fc.predict_rate(fn, t=0.0)
+
+
+def test_ewma_seasonal_is_unbiased_on_a_sinusoid():
+    """Warmup on one seed, then predict along a fresh period while observing
+    it: the recombined level x profile forecast stays within a quarter of the
+    base rate at every probe and shows no systematic bias — level pinned to
+    the trailing-period mean, profile tracking the true seasonal factors."""
+    cfg = _cfg()
+    pop = DiurnalPop("d", base_rate=60.0, amplitude=0.9, period_s=60.0)
+    warmup = generate_trace([pop], 600.0, seed=3)
+    hist = RateHistory(cfg, FixedClock())
+    fc = EwmaSeasonalForecaster(cfg, hist)
+    _replay(fc, hist, "d", warmup, 600.0)
+    eval_trace = iter(generate_trace([pop], 60.0, seed=4))
+    pending = next(eval_trace, None)
+    errs = []
+    for t in range(5, 60, 5):
+        while pending is not None and pending[0] < t:
+            hist.observe("d", t=pending[0])
+            pending = next(eval_trace, None)
+        pred = fc.predict_rate("d", horizon_s=0.0, t=float(t))
+        errs.append((pred - pop.rate(float(t))) / 60.0)
+    errs = np.asarray(errs)
+    assert abs(errs.mean()) < 0.08                  # no systematic bias
+    assert np.abs(errs).max() < 0.25                # phase-wise accuracy
+
+
+def test_ewma_level_ignores_the_wave():
+    """The level is a trailing one-period mean: flat through the cycle."""
+    cfg = _cfg()
+    pop = DiurnalPop("d", base_rate=60.0, amplitude=0.9, period_s=60.0)
+    trace = generate_trace([pop], 600.0, seed=3)
+    hist = RateHistory(cfg, FixedClock())
+    fc = EwmaSeasonalForecaster(cfg, hist)
+    _replay(fc, hist, "d", trace, 600.0)
+    level, _, _ = fc._ingest("d", 0.0)
+    assert abs(level - 60.0) < 0.15 * 60.0
+
+
+def test_seasonal_read_is_clamped():
+    cfg = _cfg()
+    fc = EwmaSeasonalForecaster(cfg, RateHistory(cfg, FixedClock()))
+    profile = np.zeros(cfg.season_buckets)
+    counts = np.zeros(cfg.season_buckets)
+    assert fc._seasonal(profile, counts, 0) == 1.0  # no evidence -> neutral
+    counts[1] = 50.0
+    profile[1] = 1e6
+    assert fc._seasonal(profile, counts, 1) == 10.0
+    profile[1] = 1e-9
+    assert fc._seasonal(profile, counts, 1) == 0.1
+
+
+def test_reactive_forecaster_is_trailing_rate():
+    cfg = _cfg()
+    hist = RateHistory(cfg, FixedClock())
+    fc = ReactiveForecaster(cfg, hist)
+    for t in np.arange(0.0, 4.0, 0.25):
+        hist.observe("f", t=float(t))
+    assert fc.predict_rate("f", t=4.0) == pytest.approx(4.0)
+
+
+def test_learned_forecaster_untrained_falls_back_to_window_mean():
+    cfg = _cfg()
+    hist = RateHistory(cfg, FixedClock())
+    fc = LearnedForecaster(cfg, hist)
+    for t in np.arange(0.0, 32.0, 0.5):
+        hist.observe("f", t=float(t))
+    assert fc.predict_rate("f", t=32.0) == pytest.approx(2.0)
+
+
+def test_learned_forecaster_fits_and_predicts_nonnegative():
+    cfg = _cfg(window=8)
+    hist = RateHistory(cfg, FixedClock())
+    fc = LearnedForecaster(cfg, hist)
+    rng = np.random.default_rng(0)
+    X = rng.uniform(0.0, 10.0, size=(64, 8)).astype(np.float32)
+    y = X.mean(axis=1)
+    losses = fc.fit(X, y, epochs=3, batch=32)
+    assert fc.trained and len(losses) == 3
+    for t in np.arange(0.0, 8.0, 0.5):
+        hist.observe("f", t=float(t))
+    assert fc.predict_rate("f", t=8.0) >= 0.0
+
+
+def test_make_forecaster_dispatch():
+    cfg = _cfg()
+    hist = RateHistory(cfg, FixedClock())
+    assert isinstance(make_forecaster(_cfg(model="ewma"), hist),
+                      EwmaSeasonalForecaster)
+    assert isinstance(make_forecaster(_cfg(model="reactive"), hist),
+                      ReactiveForecaster)
+    assert isinstance(make_forecaster(_cfg(model="learned"), hist),
+                      LearnedForecaster)
+
+
+def test_forecast_error_summary():
+    err = ForecastError()
+    err.record("f", 10.0, 8.0)
+    err.record("f", 6.0, 8.0)
+    s = err.summary()
+    assert s["n"] == 2
+    assert s["mae"] == pytest.approx(2.0)
+    assert s["bias"] == pytest.approx(0.0)
+    assert err.pairs("f") == [(10.0, 8.0), (6.0, 8.0)]
+
+
+# ----------------------------------------------------------------- planner
+
+class _Dep:
+    class _Img:
+        key = "img"
+
+    def __init__(self, name: str) -> None:
+        self.name = name
+        self.image = self._Img()
+
+
+def _planner(clock, cfg=None, **cbs):
+    cfg = cfg or _cfg(plan_interval_s=0.5, cool_rate_threshold=1.0)
+    hist = RateHistory(cfg, clock)
+    fc = EwmaSeasonalForecaster(cfg, hist)
+    timer = DeadlineTimer(clock=clock)
+    return PreBootPlanner(cfg, fc, timer, clock, **cbs), hist, timer
+
+
+def test_planner_publishes_cooldown_on_quiet():
+    """Traffic, then silence: the published target must drop to ZERO (the
+    idle-timeout replacement) and the transition is counted."""
+    clock = VirtualClock()
+    planner, hist, timer = _planner(clock)
+    planner.register(_Dep("f"))
+    for t in np.arange(0.0, 5.0, 0.1):
+        hist.observe("f", t=float(t))
+    planner.tick_once(t=6.0)
+    assert planner.pool_target("f") > 0
+    planner.tick_once(t=120.0)                      # long quiet: predicts ~0
+    assert planner.pool_target("f") == 0
+    assert planner.cooldowns == 1
+    timer.close()
+
+
+def test_planner_preboots_are_claimed_or_expired_never_leaked():
+    clock = VirtualClock()
+    booted, cancelled = [], []
+
+    class Handle:
+        cancelled = False
+
+        def cancel(self):
+            cancelled.append(self)
+
+    class Host:
+        host_id = 0
+
+    planner, hist, timer = _planner(
+        clock,
+        route=lambda key: Host(),
+        preboot=lambda host, dep: booted.append(Handle()) or booted[-1])
+    planner.register(_Dep("f"))
+    for t in np.arange(0.0, 4.0, 0.05):             # 20 rps
+        hist.observe("f", t=float(t))
+    clock.run_until(4.0)
+    planner.tick_once()
+    assert planner.preboots_planned >= 1
+    claimed = planner.claim(0, "img")
+    assert claimed is booted[0]
+    assert planner.claim(0, "missing") is None
+    # whatever is still parked expires via TTL and is cancelled
+    clock.run_until(clock.now() + planner.cfg.preboot_ttl_s + 1.0)
+    assert planner.parked_count() == 0
+    assert planner.preboots_claimed + planner.preboots_expired \
+        == planner.preboots_planned
+    planner.stop()
+    timer.close()
+
+
+def test_planner_records_forecast_error_pairs():
+    clock = VirtualClock()
+    planner, hist, timer = _planner(clock)
+    planner.register(_Dep("f"))
+    for t in np.arange(0.0, 3.0, 0.1):
+        hist.observe("f", t=float(t))
+    planner.tick_once(t=3.0)                        # prediction outstanding
+    planner.tick_once(t=3.0 + planner.cfg.horizon_s)  # its horizon elapsed
+    assert planner.error.summary()["n"] >= 1
+    timer.close()
+
+
+def test_planner_tick_never_raises_into_the_timer():
+    clock = VirtualClock()
+
+    def bad_route(key):
+        raise RuntimeError("router down")
+
+    planner, hist, timer = _planner(clock, route=bad_route)
+    planner.register(_Dep("f"))
+    for t in np.arange(0.0, 3.0, 0.05):
+        hist.observe("f", t=float(t))
+    planner.start()
+    clock.run_until(5.0)                            # ticks fire; no raise
+    planner.stop()
+    assert planner.ticks >= 1
+    timer.close()

@@ -42,7 +42,9 @@ from benchmarks.bench_scale import (  # noqa: E402
     SimDeployment,
     XlaRuntimeError,
     default_chaos,
+    resilience_chaos,
     run_scale,
+    validate_chaos,
 )
 from benchmarks.bench_scale import main as bench_main  # noqa: E402
 
@@ -409,6 +411,37 @@ def test_default_chaos_has_kills_and_adds():
     assert kinds.count("add") >= 2
     assert all(0.0 <= o["t"] <= 100.0 for o in ops)
     assert ops == sorted(ops, key=lambda o: o["t"])
+
+
+def test_validate_chaos_accepts_both_presets():
+    """The shipped schedules must pass their own validator, unmodified."""
+    assert validate_chaos(default_chaos(100.0)) == default_chaos(100.0)
+    assert validate_chaos(resilience_chaos(100.0)) == resilience_chaos(100.0)
+
+
+@pytest.mark.parametrize("schedule,fragment", [
+    ("not-a-list", "must be a list"),
+    (["not-a-dict"], "must be a dict"),
+    ([{"t": 1.0, "op": "kil"}], "unknown op"),              # the typo case
+    ([{"op": "kill"}], "missing numeric 't'"),
+    ([{"t": "soon", "op": "kill"}], "missing numeric 't'"),
+    ([{"t": 1.0, "op": "store_slow", "factor": 4.0}], "duration"),
+])
+def test_validate_chaos_rejects_malformed_up_front(schedule, fragment):
+    """A bad schedule raises BEFORE the run starts — a typo'd op used to
+    surface only when (or if) its event fired mid-run."""
+    with pytest.raises(ValueError, match=fragment):
+        validate_chaos(schedule)
+
+
+def test_chaos_file_validated_at_load_time(tmp_path):
+    """--chaos-file with an unknown op fails at load, not mid-run."""
+    bad = tmp_path / "chaos.json"
+    bad.write_text(json.dumps([{"t": 5.0, "op": "explode"}]))
+    with pytest.raises(ValueError, match="unknown op"):
+        bench_main(["--requests", "50", "--hosts", "2",
+                    "--chaos-file", str(bad),
+                    "--out", str(tmp_path / "out.json")])
 
 
 def test_bench_cli_writes_report_and_gates(tmp_path):

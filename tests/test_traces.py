@@ -1,0 +1,136 @@
+"""Trace generator guarantees the forecast bench stands on.
+
+Three properties, matching benchmarks/traces.py's contract:
+
+* determinism — same (populations, duration, seed) reproduces the same
+  trace byte-for-byte, per-population streams are independent (adding a
+  population never perturbs another's arrivals);
+* statistics — diurnal arrivals actually carry the configured period (the
+  peak phase bucket sees ~(1+amplitude)/(1-amplitude) times the trough's
+  arrivals), MMPP burst lengths match the configured dwell means within
+  tolerance, one-shots fire exactly once each;
+* scheduling — ``schedule_arrivals`` delivers every arrival at its trace
+  time on a virtual clock with no real sleeping and only ONE pending clock
+  event at a time (constant footprint for million-event traces).
+"""
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT))
+
+from benchmarks.traces import (  # noqa: E402
+    BurstyPop,
+    DiurnalPop,
+    OneShotPop,
+    bucket_rates,
+    default_populations,
+    generate_trace,
+    schedule_arrivals,
+    training_windows,
+)
+from repro.core.simclock import VirtualClock  # noqa: E402
+
+
+# ------------------------------------------------------------- determinism
+
+def test_same_seed_reproduces_trace_exactly():
+    pops = default_populations()
+    a = generate_trace(pops, 120.0, seed=7)
+    b = generate_trace(pops, 120.0, seed=7)
+    assert a == b
+    assert len(a) > 100
+
+
+def test_different_seeds_differ():
+    pops = default_populations()
+    assert generate_trace(pops, 60.0, 1) != generate_trace(pops, 60.0, 2)
+
+
+def test_population_streams_are_independent():
+    """Adding a population must not perturb another's arrivals (each derives
+    its own RNG from (seed, name))."""
+    solo = DiurnalPop("d", base_rate=5.0)
+    alone = solo.generate(60.0, seed=3)
+    mixed = generate_trace([solo, BurstyPop("b"), OneShotPop("o")], 60.0,
+                           seed=3)
+    assert [a for a in mixed if a[1] == "d"] == alone
+
+
+# -------------------------------------------------------------- statistics
+
+def test_diurnal_arrivals_carry_the_configured_period():
+    """Fold arrivals by phase: peak-quarter mass over trough-quarter mass
+    approaches (1 + amplitude) / (1 - amplitude)."""
+    pop = DiurnalPop("d", base_rate=30.0, amplitude=0.8, period_s=60.0)
+    arrivals = pop.generate(600.0, seed=0)          # ~10 periods
+    phases = np.asarray([t % 60.0 for t, _ in arrivals])
+    # peak at t=15 (sin max), trough at t=45: quarter-period windows
+    peak = np.sum((phases >= 7.5) & (phases < 22.5))
+    trough = np.sum((phases >= 37.5) & (phases < 52.5))
+    expected = (1 + 0.8) / (1 - 0.8)                # 9x, minus window blur
+    assert peak / max(trough, 1) > expected * 0.5
+    # mean rate within 15% of base_rate
+    assert abs(len(arrivals) / 600.0 - 30.0) < 0.15 * 30.0
+
+
+def test_bursty_on_off_structure():
+    """MMPP arrivals cluster: gaps >> mean_on_s are OFF dwells and their mean
+    approaches mean_off_s; total mass matches duty-cycle x rate_on."""
+    pop = BurstyPop("b", rate_on=40.0, mean_on_s=3.0, mean_off_s=25.0)
+    arrivals = pop.generate(2000.0, seed=1)
+    times = np.asarray([t for t, _ in arrivals])
+    gaps = np.diff(times)
+    off_gaps = gaps[gaps > 3.0]                     # longer than an ON dwell
+    assert off_gaps.size >= 10
+    assert 10.0 < off_gaps.mean() < 50.0            # ~mean_off_s
+    duty = 3.0 / (3.0 + 25.0)
+    expect = 40.0 * duty * 2000.0
+    assert abs(times.size - expect) < 0.35 * expect
+
+
+def test_oneshots_fire_exactly_once_each():
+    pop = OneShotPop("cron", n_functions=9)
+    arrivals = pop.generate(100.0, seed=5)
+    names = [fn for _, fn in arrivals]
+    assert len(names) == 9 and len(set(names)) == 9
+    assert all(0.0 <= t < 100.0 for t, _ in arrivals)
+
+
+def test_bucket_rates_conserves_mass():
+    pops = default_populations()
+    trace = generate_trace(pops, 90.0, seed=2)
+    rates = bucket_rates(trace, 90.0, bucket_s=1.0)
+    total = sum(float(r.sum()) for r in rates.values())
+    assert total == len(trace)                      # bucket_s=1: rate == count
+
+
+def test_training_windows_shapes_and_targets():
+    X, y = training_windows(default_populations(), seed=4, duration_s=200.0,
+                            window=32, horizon_s=2.0)
+    assert X.ndim == 2 and X.shape[1] == 32
+    assert y.shape == (X.shape[0],)
+    assert np.all(X >= 0.0) and np.all(y >= 0.0)
+
+
+# -------------------------------------------------------------- scheduling
+
+def test_schedule_arrivals_is_virtual_and_incremental():
+    """Every arrival lands at its trace time, the walk never sleeps for
+    real, and at most one arrival event is pending at any instant."""
+    clock = VirtualClock()
+    trace = generate_trace(default_populations(), 30.0, seed=6)
+    seen = []
+    schedule_arrivals(clock, trace, lambda fn: seen.append((clock.now(), fn)))
+    assert clock.pending() <= 1                     # incremental chaining
+    wall = time.perf_counter()
+    clock.run_until_idle()
+    wall = time.perf_counter() - wall
+    assert wall < 5.0                               # no real 30 s of sleeping
+    assert len(seen) == len(trace)
+    for (t_seen, fn_seen), (t_trace, fn_trace) in zip(seen, trace):
+        assert fn_seen == fn_trace
+        assert abs(t_seen - t_trace) < 1e-6

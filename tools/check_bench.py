@@ -1,0 +1,183 @@
+"""Validate committed benchmark artifacts and gate headline regressions.
+
+Every ``BENCH_*.json`` at the repo root is a benchmark contract: the file
+commits a run's headline metrics, and CI refuses a PR that silently walks
+one backward. Two checks, both stdlib-only (this runs before deps install):
+
+1. **Schema** — every file must be schema v2: ``bench`` (str), ``run_id``
+   (str, derived from the run CONFIG, never a timestamp), ``seed`` (int),
+   and a non-empty ``headline`` mapping of metric name to
+   ``{"value": number, "better": "lower"|"higher", "rel_tol": number}``.
+
+2. **Regression** — when git has a baseline (``git show <ref>:<file>``)
+   whose ``bench`` AND ``run_id`` match the working-tree file, each shared
+   headline metric must not regress past the BASELINE's ``rel_tol``
+   (committed bar, not the PR's): ``better: lower`` fails when
+   ``value > base * (1 + tol)``, ``better: higher`` fails when
+   ``value < base * (1 - tol)``. A missing baseline, a v1 baseline, or a
+   differing run_id (config change) skips the comparison with a note —
+   only like-for-like runs are compared.
+
+Exit 0 when every file validates and nothing regressed; 1 otherwise.
+Used as a CI step (after the bench matrix re-generates artifacts) and as a
+tier-1 test (tests/test_check_bench.py) so a malformed commit fails locally.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+SCHEMA_VERSION = 2
+BETTER = ("lower", "higher")
+
+
+def validate_schema(data: Any, name: str) -> List[str]:
+    """Schema-v2 violations for one parsed BENCH file (empty list = valid)."""
+    errs: List[str] = []
+    if not isinstance(data, dict):
+        return [f"{name}: top level must be an object"]
+    if data.get("schema_version") != SCHEMA_VERSION:
+        errs.append(f"{name}: schema_version must be {SCHEMA_VERSION} "
+                    f"(got {data.get('schema_version')!r})")
+    if not isinstance(data.get("bench"), str) or not data.get("bench"):
+        errs.append(f"{name}: 'bench' must be a non-empty string")
+    if not isinstance(data.get("run_id"), str) or not data.get("run_id"):
+        errs.append(f"{name}: 'run_id' must be a non-empty string")
+    if not isinstance(data.get("seed"), int):
+        errs.append(f"{name}: 'seed' must be an integer")
+    headline = data.get("headline")
+    if not isinstance(headline, dict) or not headline:
+        errs.append(f"{name}: 'headline' must be a non-empty object")
+        return errs
+    for metric, row in headline.items():
+        where = f"{name}: headline[{metric!r}]"
+        if not isinstance(row, dict):
+            errs.append(f"{where} must be an object")
+            continue
+        value = row.get("value")
+        if not isinstance(value, (int, float)) or value != value:  # NaN check
+            errs.append(f"{where}.value must be a finite number")
+        if row.get("better") not in BETTER:
+            errs.append(f"{where}.better must be one of {BETTER}")
+        tol = row.get("rel_tol")
+        if not isinstance(tol, (int, float)) or not 0.0 <= float(tol) <= 1.0:
+            errs.append(f"{where}.rel_tol must be a number in [0, 1]")
+    return errs
+
+
+def compare_headline(current: Dict[str, Any], baseline: Dict[str, Any],
+                     name: str) -> Tuple[List[str], List[str]]:
+    """(regressions, notes) for one file vs its committed baseline."""
+    if baseline.get("schema_version") != SCHEMA_VERSION:
+        return [], [f"{name}: baseline is schema "
+                    f"v{baseline.get('schema_version')} — no comparison"]
+    if (baseline.get("bench"), baseline.get("run_id")) != \
+            (current.get("bench"), current.get("run_id")):
+        return [], [f"{name}: run_id changed "
+                    f"({baseline.get('run_id')!r} -> "
+                    f"{current.get('run_id')!r}) — no comparison"]
+    regressions: List[str] = []
+    notes: List[str] = []
+    base_headline = baseline.get("headline") or {}
+    cur_headline = current.get("headline") or {}
+    for metric, base_row in base_headline.items():
+        cur_row = cur_headline.get(metric)
+        if cur_row is None:
+            regressions.append(f"{name}: headline metric {metric!r} "
+                               "disappeared (present in baseline)")
+            continue
+        base_v = float(base_row["value"])
+        cur_v = float(cur_row["value"])
+        tol = float(base_row["rel_tol"])          # the committed bar
+        better = base_row["better"]
+        if better == "lower":
+            bound = base_v * (1.0 + tol)
+            bad = cur_v > bound
+        else:
+            bound = base_v * (1.0 - tol)
+            bad = cur_v < bound
+        verdict = "REGRESSED" if bad else "ok"
+        notes.append(f"{name}: {metric} {base_v:.6g} -> {cur_v:.6g} "
+                     f"(better={better}, bound={bound:.6g}) {verdict}")
+        if bad:
+            regressions.append(
+                f"{name}: {metric} regressed: {cur_v:.6g} vs baseline "
+                f"{base_v:.6g} (better={better}, rel_tol={tol})")
+    return regressions, notes
+
+
+def git_baseline(path: Path, ref: str, root: Path) -> Optional[Dict[str, Any]]:
+    """The committed version of ``path`` at ``ref``, or None if absent."""
+    rel = path.relative_to(root).as_posix()
+    try:
+        out = subprocess.run(
+            ["git", "show", f"{ref}:{rel}"], cwd=root,
+            capture_output=True, text=True, timeout=30)
+    except (OSError, subprocess.TimeoutExpired):
+        return None
+    if out.returncode != 0:
+        return None
+    try:
+        return json.loads(out.stdout)
+    except json.JSONDecodeError:
+        return None
+
+
+def check(root: Path = REPO_ROOT, ref: str = "HEAD",
+          compare: bool = True) -> Tuple[List[str], List[str]]:
+    """(problems, notes) across every BENCH_*.json under ``root``."""
+    problems: List[str] = []
+    notes: List[str] = []
+    files = sorted(root.glob("BENCH_*.json"))
+    if not files:
+        return ["no BENCH_*.json files found at repo root"], notes
+    for path in files:
+        name = path.name
+        try:
+            data = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError) as exc:
+            problems.append(f"{name}: unreadable ({exc})")
+            continue
+        errs = validate_schema(data, name)
+        problems.extend(errs)
+        if errs or not compare:
+            continue
+        baseline = git_baseline(path, ref, root)
+        if baseline is None:
+            notes.append(f"{name}: no baseline at {ref} — new artifact")
+            continue
+        regressions, cmp_notes = compare_headline(data, baseline, name)
+        problems.extend(regressions)
+        notes.extend(cmp_notes)
+    return problems, notes
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--root", default=str(REPO_ROOT),
+                        help="repo root holding BENCH_*.json files")
+    parser.add_argument("--ref", default="HEAD",
+                        help="git ref providing regression baselines")
+    parser.add_argument("--no-compare", action="store_true",
+                        help="schema validation only (no git baselines)")
+    args = parser.parse_args(argv)
+    problems, notes = check(Path(args.root).resolve(), args.ref,
+                            compare=not args.no_compare)
+    for note in notes:
+        print(f"  {note}")
+    if problems:
+        for p in problems:
+            print(f"FAIL {p}", file=sys.stderr)
+        return 1
+    print("check_bench: all BENCH_*.json artifacts valid, no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
