@@ -305,6 +305,154 @@ def delta_sweep(fracs=(0.0, 0.25, 0.5, 1.0), n_leaves: int = 128,
     return cells
 
 
+def decode_sweep(n_requests: int = 16, seed: int = 0, slots: int = 8,
+                 decode_steps: int = 192, slo_ms: float = 30_000.0,
+                 ratio_floor: float = 1.5, out_path=None) -> dict:
+    """Step-granular continuous batching vs request-granular bucket batching.
+
+    The same mixed-budget workload runs through both decode tiers: a
+    heavy-tailed budget mix (most requests want a handful of tokens, a few
+    want the full budget) on identical prompts. The BUCKET cell coalesces
+    requests into the fused serve program, which decodes the full
+    ``decode_steps`` budget for every member — an early finisher pays for
+    every remaining step. The CONTINUOUS cell joins the paged-KV step loop
+    and leaves at its own budget. The headline is USEFUL tokens per second:
+    tokens the requests actually asked for, divided by wall clock — the
+    metric the fused program wastes on retired rows.
+
+    Writes the ``BENCH_10_decode.json`` contract (schema v2) when
+    ``out_path`` is given; the CI gate is the tokens/s ratio >= ``ratio_floor``
+    with the continuous cell's e2e p95 inside ``slo_ms``.
+    """
+    import json
+
+    from repro.core import FunctionSpec, Gateway
+    from repro.core.batching import BatchingConfig
+    from repro.core.decode import DecodeConfig
+
+    spec = FunctionSpec(arch="llama3.2-3b", batch_size=1, prompt_len=8,
+                        decode_steps=decode_steps)
+    rng = np.random.default_rng(seed)
+    # the serving long tail: most requests stop after a handful of tokens, a
+    # few run longer — and ALL of them sit far below the deploy-time fused
+    # budget, which the bucket tier must decode in full for every member.
+    # That gap is exactly the waste continuous batching exists to reclaim.
+    long_budget = max(2, spec.decode_steps // 8)
+    budgets = [long_budget if i % 4 == 0 else int(rng.integers(1, 7))
+               for i in range(n_requests)]
+    useful = sum(budgets)
+    cells = {}
+
+    # continuous: one resident executor, requests join/leave per step
+    gw = Gateway(n_hosts=1, slots_per_host=2, mode="cold", hedging=False,
+                 decode=DecodeConfig(slots=slots, page_size=8,
+                                     cool_after_s=0.25))
+    dep = gw.deploy(spec)
+    prompts = [dep.example_tokens(seed=1000 + i)[:1] for i in range(n_requests)]
+    label = "decode:continuous"
+    t0 = time.perf_counter()
+    futs = [gw.invoke_decode_async(spec.name, tokens=p, max_new=b, label=label)
+            for p, b in zip(prompts, budgets)]
+    outs = [np.asarray(f.result(600)) for f in futs]
+    wall_c = time.perf_counter() - t0
+    st = gw.stats(label)
+    ttfr = gw.stats(label, "ttfr")
+    dsum = gw.decode_summary(spec.name)
+    gw.shutdown()
+    short = [i for i, (o, b) in enumerate(zip(outs, budgets))
+             if o.shape != (b,)]
+    if short:
+        raise RuntimeError(f"continuous cell truncated requests: {short}")
+    cells["continuous"] = {
+        "wall_s": wall_c, "useful_tokens": useful,
+        "tokens_per_s": useful / wall_c,
+        "p50_ms": st.p50, "p95_ms": st.p95,
+        "ttfr_p50_ms": ttfr.p50, "ttfr_p95_ms": ttfr.p95,
+        "steps": dsum["steps"], "occupancy": dsum["occupancy"],
+        "boots": dsum["boots"], "admit_waits": dsum["admit_waits"],
+        "pages_high_water": dsum["pages_high_water"],
+    }
+    emit("decode/continuous/tokens_per_s", cells["continuous"]["tokens_per_s"],
+         f"p50_ms={st.p50:.1f};p95_ms={st.p95:.1f};"
+         f"ttfr_p50_ms={ttfr.p50:.1f};steps={dsum['steps']:.0f};"
+         f"occupancy={dsum['occupancy']:.3f};wall_s={wall_c:.2f}")
+
+    # bucket: the coalescer's fused program — full decode budget per member
+    gw = Gateway(n_hosts=1, slots_per_host=2, mode="cold", hedging=False,
+                 batching=BatchingConfig(min_window_s=0.02))
+    gw.deploy(spec)
+    label = "decode:bucket"
+    t0 = time.perf_counter()
+    futs = [gw.invoke_async(spec.name, tokens=p, label=label) for p in prompts]
+    for f in futs:
+        f.result(600)
+    wall_b = time.perf_counter() - t0
+    st_b = gw.stats(label)
+    bsum = gw.batching_summary()
+    gw.shutdown()
+    cells["bucket"] = {
+        "wall_s": wall_b, "useful_tokens": useful,
+        "decoded_tokens": n_requests * spec.decode_steps,
+        "tokens_per_s": useful / wall_b,
+        "p50_ms": st_b.p50, "p95_ms": st_b.p95,
+        "mean_batch": (bsum or {}).get("mean_batch_size", 1.0),
+    }
+    emit("decode/bucket/tokens_per_s", cells["bucket"]["tokens_per_s"],
+         f"p50_ms={st_b.p50:.1f};p95_ms={st_b.p95:.1f};"
+         f"decoded={cells['bucket']['decoded_tokens']};"
+         f"mean_batch={cells['bucket']['mean_batch']:.2f};wall_s={wall_b:.2f}")
+
+    ratio = cells["continuous"]["tokens_per_s"] / cells["bucket"]["tokens_per_s"]
+    ok = ratio >= ratio_floor and cells["continuous"]["p95_ms"] <= slo_ms
+    emit("decode/ratio", ratio,
+         f"floor={ratio_floor};slo_ms={slo_ms:g};ok={ok}")
+    payload = {
+        "schema_version": 2,
+        "bench": "decode",
+        "run_id": f"decode-n{n_requests}s{slots}"
+                  f"d{spec.decode_steps}-seed{seed}",
+        "seed": seed,
+        "config": {
+            "n_requests": n_requests, "slots": slots, "page_size": 8,
+            "prompt_len": spec.prompt_len, "decode_steps": spec.decode_steps,
+            "budgets": budgets, "useful_tokens": useful,
+            "slo_ms": slo_ms, "ratio_floor": ratio_floor,
+        },
+        "cells": cells,
+        "gate": {"ok": ok, "ratio": ratio, "ratio_floor": ratio_floor,
+                 "slo_ms": slo_ms},
+        "headline": {
+            "tokens_per_s_ratio": {
+                "value": ratio, "better": "higher", "rel_tol": 0.25},
+            "continuous_p95_ms": {
+                "value": cells["continuous"]["p95_ms"], "better": "lower",
+                "rel_tol": 0.5},
+        },
+    }
+    if out_path is not None:
+        Path(out_path).write_text(
+            json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    return payload
+
+
+def smoke_decode(out_path=None) -> int:
+    """CI gate: continuous batching must deliver >= 1.5x the bucket tier's
+    useful tokens/s on the mixed-budget workload, inside the e2e p95 SLO."""
+    payload = decode_sweep(out_path=out_path)
+    gate = payload["gate"]
+    cont = payload["cells"]["continuous"]
+    print(f"bench-smoke[decode]: ratio={gate['ratio']:.2f} "
+          f"(floor {gate['ratio_floor']}) "
+          f"continuous_p95_ms={cont['p95_ms']:.0f} (slo {gate['slo_ms']:g}) "
+          f"occupancy={cont['occupancy']:.3f} boots={cont['boots']:.0f}")
+    if not gate["ok"]:
+        print("bench-smoke[decode]: FAIL — continuous batching is not "
+              "beating bucket batching by the required margin inside SLO")
+        return 1
+    print("bench-smoke[decode]: OK")
+    return 0
+
+
 def run(make_gateway, samples_scale: float = 1.0) -> None:
     spec = bench_spec()
 
@@ -328,6 +476,8 @@ def run(make_gateway, samples_scale: float = 1.0) -> None:
     load_sweep(make_gateway)
     placement_sweep(make_gateway)
     delta_sweep()
+    decode_sweep(out_path=Path(__file__).resolve().parent.parent
+                 / "BENCH_10_decode.json")
 
 
 def smoke_placement(hosts: int = 4, rate_rps: float = 30.0,
@@ -411,7 +561,21 @@ if __name__ == "__main__":
     parser.add_argument("--json", type=str, default=None,
                         help="also write the emitted rows to this JSON file "
                              "(CI uploads it as a workflow artifact)")
+    parser.add_argument("--decode", action="store_true",
+                        help="run the continuous-vs-bucket decode sweep; with "
+                             "--smoke it gates the tokens/s ratio >= 1.5 and "
+                             "the p95 SLO")
+    parser.add_argument("--out", type=str, default=None,
+                        help="with --decode: write BENCH_10_decode.json here")
     args = parser.parse_args()
+    if args.decode:
+        out = args.out or str(Path(__file__).resolve().parent.parent
+                              / "BENCH_10_decode.json")
+        rc = smoke_decode(out_path=out) if args.smoke else \
+            (0 if decode_sweep(out_path=out)["gate"]["ok"] else 1)
+        if args.json:
+            emit_json(args.json)
+        sys.exit(rc)
     if args.smoke:
         rc = smoke_placement(hosts=args.hosts) if args.hosts > 1 else smoke()
         if args.json:

@@ -47,6 +47,23 @@ def run() -> None:
     gb = 2 * B * S * Hkv * D * 4 / 1e9
     emit("kernel/decode_attention_4k", dt * 1e6, f"GBps={gb/dt:.1f}")
 
+    # paged decode attention on the SAME logical cache: scatter the 4k cache
+    # into shuffled pages and pay the table gather — the derived column is the
+    # paged/contiguous wall ratio (the rent the page indirection charges)
+    page_size, max_pages = 64, S // 64
+    perm = jax.random.permutation(ks[2], B * max_pages) + 1
+    table = perm.reshape(B, max_pages).astype(jnp.int32)
+    P = 1 + B * max_pages
+    kp = jnp.zeros((P, page_size, Hkv, D), jnp.float32).at[table.reshape(-1)].set(
+        kc.reshape(B * max_pages, page_size, Hkv, D))
+    vp = jnp.zeros((P, page_size, Hkv, D), jnp.float32).at[table.reshape(-1)].set(
+        vc.reshape(B * max_pages, page_size, Hkv, D))
+    lengths = jnp.full((B,), S, jnp.int32)
+    f = jax.jit(lambda q, k, v, t, ln: ref.paged_decode_attention(q, k, v, t, ln))
+    dt_paged = _time(f, qd, kp, vp, table, lengths)
+    emit("kernel/paged_decode_attention_4k", dt_paged * 1e6,
+         f"GBps={gb/dt_paged:.1f};vs_contig={dt_paged/dt:.2f}x")
+
     # selective scan: B2 S512 Di256 Ds16
     B, S, Di, Ds = 2, 512, 256, 16
     x = jax.random.normal(ks[0], (B, S, Di))

@@ -24,6 +24,15 @@ In cold mode one unikernel boot now serves N coalesced requests:
 boots-per-request drops from 1.0 toward 1/max_batch while every request keeps
 its own queue-delay accounting (Timeline.batch_size / boots_share).
 
+Granularity boundary: the coalescer batches at REQUEST granularity — one
+fused bucket program runs every member for the full decode budget, so mixed
+decode lengths pay the longest member's steps. Decode-shaped invokes
+therefore BYPASS this layer entirely (``Gateway.invoke_decode``) and join
+:class:`repro.core.decode.DecodeScheduler`'s step-granular loop instead,
+where a request occupies a batch row only for the steps it actually decodes.
+Prefill/serve-shaped work keeps coalescing here; the two tiers share the
+dispatcher's drivers and the same residency accounting.
+
 Invariants: whole-batch retry = every member exactly once per attempt (the
 batch rides the dispatcher as ONE unit — no member is ever re-dispatched solo
 or dropped); every submitted Future settles exactly once, including on drain

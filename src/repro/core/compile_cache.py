@@ -39,6 +39,11 @@ from repro.core.artifact import ImageManifest
 # derived keys never collide with a real image.
 HEAD_SUFFIX = "#head"
 TAIL_SUFFIX = "#tail"
+# Continuous-batching decode bundle: the admit program (prefill one request
+# into its reserved pages) and the step program (one token for every resident
+# slot), both fixed-shape per deployment.
+DECODE_ADMIT_SUFFIX = "#decode_admit"
+DECODE_STEP_SUFFIX = "#decode_step"
 
 
 def head_key(key: str) -> str:
@@ -47,6 +52,14 @@ def head_key(key: str) -> str:
 
 def tail_key(key: str) -> str:
     return key + TAIL_SUFFIX
+
+
+def decode_admit_key(key: str) -> str:
+    return key + DECODE_ADMIT_SUFFIX
+
+
+def decode_step_key(key: str) -> str:
+    return key + DECODE_STEP_SUFFIX
 
 
 class CompileCache:

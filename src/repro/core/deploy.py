@@ -33,7 +33,9 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.artifact import ExecutorImage, FunctionSpec, ImageManifest
-from repro.core.compile_cache import CompileCache, head_key, tail_key
+from repro.core.compile_cache import (
+    CompileCache, decode_admit_key, decode_step_key, head_key, tail_key,
+)
 from repro.core.metrics import now
 from repro.core.snapshot import SnapshotStore, save_generic_checkpoint
 from repro.dist.sharding import abstract_state
@@ -98,6 +100,58 @@ def make_tail_fn(model: Model, spec: FunctionSpec) -> Callable:
         return jnp.moveaxis(toks, 0, 1)                      # [B, decode_steps]
 
     return tail
+
+
+def make_admit_fn(model: Model, max_pages: int, page_size: int) -> Callable:
+    """Continuous-batching admit: prefill ONE request into its reserved pages.
+
+    Prefills at the pool-table capacity (``max_pages * page_size``) so the
+    [L, capacity, ...] cache reshapes exactly into ``max_pages`` page-sized
+    rows, then scatters those rows to the chain's device pages via
+    ``page_ids`` ([max_pages] s32, padded with the null page — rows past the
+    chain's reservation land on page 0, which is garbage territory by
+    invariant). Returns the prompt's next-token logits ([V] — this is the
+    request's FIRST response token, the TTFR stamp) plus the updated pools.
+    """
+    capacity = max_pages * page_size
+
+    def admit(params, tokens, k_pages, v_pages, page_ids):
+        logits, cache = model.prefill(params, {"tokens": tokens},
+                                      capacity=capacity)
+        inner = cache["inner"]
+
+        def scatter(pool, new):
+            rows = new[:, 0].reshape(pool.shape[0], max_pages, page_size,
+                                     *pool.shape[3:])
+            return pool.at[:, page_ids].set(rows.astype(pool.dtype))
+
+        return logits[0], scatter(k_pages, inner["k"]), scatter(v_pages,
+                                                                inner["v"])
+
+    return admit
+
+
+def make_step_fn(model: Model) -> Callable:
+    """Continuous-batching step: one token for every resident slot at once."""
+
+    def step(params, k_pages, v_pages, page_table, pos, token):
+        return model.decode_paged(params, k_pages, v_pages, page_table, pos,
+                                  token)
+
+    return step
+
+
+@dataclasses.dataclass
+class DecodeBundle:
+    """The two fixed-shape programs the decode step loop runs, plus geometry."""
+
+    slots: int                     # batch rows of the step program
+    page_size: int                 # tokens per KV page
+    n_pages: int                   # device pool size INCLUDING the null page
+    max_pages: int                 # page-table width (pages per chain, max)
+    admit: Callable                # (params, tokens[1,S], k, v, ids) -> (logits[V], k, v)
+    step: Callable                 # (params, k, v, table, pos, tok) -> (logits[B,V], k, v)
+    aot_verified: bool = True      # False: host rejected the blobs, in-process
 
 
 def first_use_order(fn: Callable, abstract_params: Any, *abstract_args) -> List[str]:
@@ -185,6 +239,9 @@ class Deployment:
     # in-process fallback program, or None when the serialized image is good.
     _buckets: Dict[int, Any] = dataclasses.field(default_factory=dict, repr=False)
     _bucket_lock: Any = dataclasses.field(default_factory=threading.Lock, repr=False)
+    # continuous-batching decode bundle (built on demand by ensure_decode)
+    _decode_bundle: Optional[DecodeBundle] = dataclasses.field(
+        default=None, repr=False)
 
     @property
     def name(self) -> str:
@@ -231,6 +288,63 @@ class Deployment:
                 except Exception:
                     fallback = bucketed
             self._buckets[rows] = fallback
+
+    def ensure_decode(self, slots: int, page_size: int,
+                      max_pages: Optional[int] = None,
+                      n_pages: Optional[int] = None) -> DecodeBundle:
+        """Compile + serialize the continuous-batching decode bundle.
+
+        Two programs, once per deployment, ever: the admit program (prefill
+        one request into its reserved pages, yielding its first token) and
+        the step program (one token for every resident slot). Both are fixed
+        shape — ``slots`` batch rows, a ``[slots, max_pages]`` page table, a
+        pool of ``n_pages`` pages — so no request ever pays a compile, same
+        contract as ``ensure_bucket``. Defaults: ``max_pages`` covers the
+        deploy spec's worst case (prompt + decode budget), ``n_pages`` gives
+        every slot a full reservation plus the null page.
+        """
+        if max_pages is None:
+            worst = self.spec.prompt_len + self.spec.decode_steps
+            max_pages = -(-worst // page_size)
+        if n_pages is None:
+            n_pages = 1 + slots * max_pages
+        with self._bucket_lock:
+            if self._decode_bundle is not None:
+                return self._decode_bundle
+            model = self.model
+            admit_fn = make_admit_fn(model, max_pages, page_size)
+            step_fn = make_step_fn(model)
+            pool = abstract_state(model.page_pool_specs(n_pages, page_size))
+            a_kp, a_vp = pool["k_pages"], pool["v_pages"]
+            a_tok1 = jax.ShapeDtypeStruct((1, self.spec.prompt_len), jnp.int32)
+            a_ids = jax.ShapeDtypeStruct((max_pages,), jnp.int32)
+            a_table = jax.ShapeDtypeStruct((slots, max_pages), jnp.int32)
+            a_pos = jax.ShapeDtypeStruct((slots,), jnp.int32)
+            a_tok = jax.ShapeDtypeStruct((slots, 1), jnp.int32)
+            admit_c = jax.jit(admit_fn).lower(
+                self.abstract_params, a_tok1, a_kp, a_vp, a_ids).compile()
+            step_c = jax.jit(step_fn).lower(
+                self.abstract_params, a_kp, a_vp, a_table, a_pos,
+                a_tok).compile()
+            admit_p, step_p, verified = admit_c, step_c, False
+            if self.fallback_program is None:
+                try:
+                    self.cache.put_compiled(decode_admit_key(self.image.key),
+                                            admit_c)
+                    self.cache.put_compiled(decode_step_key(self.image.key),
+                                            step_c)
+                    admit_p = self.cache.load_program(
+                        decode_admit_key(self.image.key))
+                    step_p = self.cache.load_program(
+                        decode_step_key(self.image.key))
+                    verified = True
+                except Exception:
+                    admit_p, step_p = admit_c, step_c
+            self._decode_bundle = DecodeBundle(
+                slots=slots, page_size=page_size, n_pages=n_pages,
+                max_pages=max_pages, admit=admit_p, step=step_p,
+                aot_verified=verified)
+            return self._decode_bundle
 
     def load_program(self, bucket_rows: Optional[int] = None) -> Callable:
         """The unikernel 'boot': deserialize from the image registry, or serve the

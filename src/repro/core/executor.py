@@ -311,6 +311,47 @@ class Executor:
                         else ExecutorState.PARTIAL
         return out
 
+    def run_decode(self, fn: Callable, *args, timeline=None) -> Any:
+        """Run a decode-bundle program (admit or step) against this
+        executor's weights.
+
+        The continuous-batching step loop owns a long-lived executor and
+        alternates between TWO programs compiled at deploy time (admit:
+        prefill-into-pages; step: one token for every resident slot) — so the
+        program is an argument here instead of the executor's baked-in serve
+        program. Same state machine and busy accounting as :meth:`run`; a
+        PARTIAL (still-streaming) executor parks until the full tree landed,
+        since both programs read every weight.
+        """
+        with self._lock:
+            runnable = (ExecutorState.READY, ExecutorState.RUNNING,
+                        ExecutorState.PARTIAL)
+            if self.state not in runnable:
+                raise RuntimeError(f"executor {self.eid} not runnable: {self.state}")
+            was_partial = self.state is ExecutorState.PARTIAL
+            self.state = ExecutorState.RUNNING
+        if was_partial and self.gates is not None:
+            try:
+                self.gates.wait_complete()
+            except BaseException:
+                with self._lock:
+                    if self.state is ExecutorState.RUNNING:
+                        self.state = ExecutorState.PARTIAL
+                raise
+        t0 = now()
+        try:
+            out = jax.block_until_ready(fn(self.params, *args))
+            if timeline is not None and not timeline.t_ttfr:
+                timeline.t_ttfr = now()
+        finally:
+            with self._lock:
+                self.busy_seconds += now() - t0
+                if self.state is ExecutorState.RUNNING:
+                    done = self.gates is None or self.gates.is_complete()
+                    self.state = ExecutorState.READY if done \
+                        else ExecutorState.PARTIAL
+        return out
+
     def run_batch(self, tokens, valid_rows: Optional[int] = None,
                   timeline=None) -> np.ndarray:
         """Run a padded coalesced batch and drop the padding rows.

@@ -31,6 +31,7 @@ from repro.core.batching import BatchingConfig, Coalescer
 from repro.core.blobstore import ChunkStore, delta_restore
 from repro.core.cluster import Cluster
 from repro.core.compile_cache import CompileCache
+from repro.core.decode import DecodeConfig, DecodeScheduler
 from repro.core.deploy import Deployment, deploy
 from repro.core.dispatcher import Dispatcher
 from repro.core.forecast import (ForecastConfig, PreBootPlanner, RateHistory,
@@ -54,7 +55,8 @@ class Gateway:
                  clock: Optional[Clock] = None,
                  default_driver: Optional[str] = None,
                  resilience: Union[bool, ResilienceConfig, None] = None,
-                 forecast: Union[bool, ForecastConfig, None] = None) -> None:
+                 forecast: Union[bool, ForecastConfig, None] = None,
+                 decode: Union[bool, DecodeConfig, None] = None) -> None:
         assert mode in ("cold", "warm")
         self.mode = mode
         self._default_driver = default_driver
@@ -72,6 +74,7 @@ class Gateway:
                                on_exit=self._account_exit, scheduler=scheduler)
         self.agent = Agent(self.recorder, self.residency, clock=clock)
         self._now = clock.now if clock is not None else _default_now
+        self._clock = clock
         # SLO-aware front door: resilience=True (or a ResilienceConfig) adds
         # per-request deadlines, early shedding of deadline-infeasible work,
         # and a brownout ladder (hedging off, streamed restores fall back to
@@ -93,6 +96,16 @@ class Gateway:
             if self.admission is not None:
                 self.coalescer.brownout = lambda: self.admission.brownout
         self.deployments: Dict[str, Deployment] = {}
+        # decode=True (or a DecodeConfig) adds the step-granular continuous
+        # batching tier: one DecodeScheduler per deployment, with its paged KV
+        # pool and deploy-time admit/step programs. Decode-shaped invokes
+        # bypass the coalescer's bucket programs entirely — the step loop IS
+        # their batching.
+        self.decode_cfg: Optional[DecodeConfig] = None
+        self.decoders: Dict[str, DecodeScheduler] = {}
+        if decode:
+            self.decode_cfg = decode if isinstance(decode, DecodeConfig) \
+                else DecodeConfig()
         # forecast=True (or a ForecastConfig) turns on predictive pre-boot:
         # a PreBootPlanner ticking on the dispatcher's shared timer predicts
         # per-function arrivals, parks speculative boots + prefetches host
@@ -141,6 +154,12 @@ class Gateway:
                 dep.ensure_bucket(bucket * spec.batch_size)
         with self._lock:
             self.deployments[spec.name] = dep
+        if self.decode_cfg is not None:
+            # decode bundle (admit + step) is a deploy-time artifact exactly
+            # like the bucket images: compiled here, never on a request
+            self.decoders[spec.name] = DecodeScheduler(
+                dep, self.cluster, self.recorder, self.decode_cfg,
+                on_exit=self._account_exit, clock=self._clock)
         if self.planner is not None:
             self.planner.register(dep)
         return dep
@@ -242,6 +261,41 @@ class Gateway:
                 lambda _f: self.admission.release(self._now() - t_admit))
         return fut
 
+    def invoke_decode_async(self, fn_name: str,
+                            tokens: Optional[np.ndarray] = None,
+                            max_new: Optional[int] = None,
+                            label: Optional[str] = None,
+                            deadline_s: Optional[float] = None) -> Future:
+        """Submit one request to the continuous-batching decode loop.
+
+        Bypasses the coalescer's bucket programs entirely: the request joins
+        the step loop at the next admission, decodes one token per step next
+        to whoever else is resident, and leaves at EOS/budget — paying for
+        exactly the tokens it generates instead of the bucket's fused decode
+        budget. Resolves to the generated token ids ([n] int32).
+        """
+        decoder = self.decoders[fn_name]
+        self.scaler.observe_arrival(fn_name)
+        if self.planner is not None:
+            self.planner.observe_arrival(fn_name)
+        if tokens is None:
+            tokens = decoder.dep.example_tokens()[:1]
+        deadline = None
+        if deadline_s is None and self.res_cfg is not None:
+            deadline_s = self.res_cfg.default_deadline_s
+        if deadline_s is not None:
+            deadline = Deadline.after(deadline_s)
+        return decoder.submit(tokens, max_new=max_new, label=label,
+                              deadline=deadline)
+
+    def invoke_decode(self, fn_name: str, tokens: Optional[np.ndarray] = None,
+                      max_new: Optional[int] = None,
+                      label: Optional[str] = None, timeout: float = 600.0,
+                      deadline_s: Optional[float] = None) -> np.ndarray:
+        return np.asarray(self.invoke_decode_async(
+            fn_name, tokens, max_new=max_new, label=label,
+            deadline_s=deadline_s).result(timeout))
+
     def invoke(self, fn_name: str, tokens: Optional[np.ndarray] = None,
                driver: Optional[str] = None, label: Optional[str] = None,
                timeout: float = 600.0, speculative: Optional[bool] = None,
@@ -324,8 +378,17 @@ class Gateway:
     def _account_exit(self, ex) -> None:
         self.residency.add_residency(ex.nbytes, ex.resident_seconds, ex.busy_seconds)
 
+    def decode_summary(self, fn_name: str) -> Optional[Dict[str, float]]:
+        """Continuous-batching health: tokens, occupancy, admits, cooldowns."""
+        decoder = self.decoders.get(fn_name)
+        return decoder.summary() if decoder is not None else None
+
     # ---------------------------------------------------------------- shutdown
     def shutdown(self) -> None:
+        for decoder in self.decoders.values():
+            # drain the step loops first: a resident request holds pages and
+            # an executor whose residency must land in the tracker
+            decoder.close()
         if self.coalescer is not None:
             # flush any requests still collecting in coalescing windows and
             # wait for in-flight batches — no Future may be left dangling

@@ -8,7 +8,13 @@ all G = Hq/Hkv query heads of the group ride in one [G, D] block (MXU-friendly f
 GQA: the [G, D] x [D, block_kv] score matmul).
 
 Length masking comes in as an s32[B, 1] operand (positions >= length are dead —
-cache slots not yet written).
+cache slots not yet written). A ragged cache depth (S % block_kv != 0) is
+handled the same way, inside the kernel: the grid rounds up and the tail
+block's out-of-range positions fall under the mask. No host-side jnp.pad of
+the caches — that was a whole-cache copy per decoded token. The tail block's
+out-of-range K/V lanes are backed by unspecified memory (interpret mode fills
+them with NaN), so V is zeroed under the mask before the PV dot; the score
+mask is a select, so NaN K lanes never survive either.
 
 Oracle: repro.kernels.ref.decode_attention.
 """
@@ -45,6 +51,12 @@ def _dec_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     kv_pos = ik * block_kv + jax.lax.broadcasted_iota(
         jnp.int32, (q.shape[0], block_kv), 1)                   # [G, bk]
     valid = kv_pos < length
+    # the ragged tail block reads past S: those V lanes hold unspecified
+    # values (NaN in interpret mode) and 0 * NaN would poison the PV dot —
+    # zero them; the score mask below is a select, so K needs no scrub
+    col = ik * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (block_kv, 1), 0)                            # [bk, 1]
+    v = jnp.where(col < length, v, 0.0)
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
@@ -77,12 +89,9 @@ def decode_attention(q, k_cache, v_cache, length, *,
     G = Hq // Hkv
     block_kv = min(block_kv, max(8, 1 << (S - 1).bit_length()))
 
-    pad = (-S) % block_kv
-    if pad:
-        widths = ((0, 0), (0, pad), (0, 0), (0, 0))
-        k_cache = jnp.pad(k_cache, widths)
-        v_cache = jnp.pad(v_cache, widths)
-    nk = k_cache.shape[1] // block_kv
+    # ceil grid: the tail block is masked inside the kernel — padding the
+    # caches here would copy the whole KV cache once per decoded token
+    nk = pl.cdiv(S, block_kv)
     lengths = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (B,)).reshape(B, 1)
     qg = q.reshape(B, Hkv, G, D)
 

@@ -79,6 +79,18 @@ def decode_attention(q, k_cache, v_cache, length):
                                interpret=(impl == "interpret"))
 
 
+def paged_decode_attention(q, k_pages, v_pages, page_table, lengths):
+    """Single-token attention vs a paged KV cache. q: [B,Hq,D]; pages
+    [P,page_size,Hkv,D]; page_table [B,max_pages] s32; lengths [] or [B]."""
+    impl = _resolved()
+    if impl == "ref":
+        return ref.paged_decode_attention(q, k_pages, v_pages, page_table,
+                                          lengths)
+    from repro.kernels import paged_decode_attention as pda
+    return pda.paged_decode_attention(q, k_pages, v_pages, page_table, lengths,
+                                      interpret=(impl == "interpret"))
+
+
 def selective_scan(x, dt, a_log, b, c, d_skip, h0=None):
     """Mamba selective scan -> (y, h_final)."""
     impl = _resolved()

@@ -179,6 +179,26 @@ def decode_attention(q, k_cache, v_cache, length, *, block_kv: int = 1024,
     return (acc / l_safe[..., None]).reshape(B, Hq, D).astype(q.dtype)
 
 
+def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
+                           block_kv: int = 1024):
+    """Single-token attention against a paged KV cache (oracle by gather).
+
+    q: [B, Hq, D]; k_pages, v_pages: [P, page_size, Hkv, D]; page_table:
+    [B, max_pages] s32 (page ids per sequence, unused entries point at the
+    null page 0); lengths: [] or [B] s32. Gathers each sequence's page chain
+    into a contiguous cache and applies the exact contiguous decode math —
+    positions >= length (including everything a null-page entry contributes)
+    are masked there.
+    """
+    B = q.shape[0]
+    _, page_size, Hkv, D = k_pages.shape
+    max_pages = page_table.shape[1]
+    table = jnp.asarray(page_table, jnp.int32)
+    k = k_pages[table].reshape(B, max_pages * page_size, Hkv, D)
+    v = v_pages[table].reshape(B, max_pages * page_size, Hkv, D)
+    return decode_attention(q, k, v, lengths, block_kv=block_kv)
+
+
 # ================================================================== selective scan
 
 def selective_scan(x, dt, a_log, b, c, d_skip, h0=None, *, block: int = 16):

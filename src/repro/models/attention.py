@@ -79,7 +79,9 @@ def attention_decode(cfg, p: dict, x_t: jax.Array, k_cache: jax.Array,
                      v_cache: jax.Array, pos: jax.Array, *, cross: bool = False):
     """One-token attention against a cache.
 
-    x_t: [B,1,d]; k_cache/v_cache: [B,S,nkv,hd]; pos: int32 scalar (next position).
+    x_t: [B,1,d]; k_cache/v_cache: [B,S,nkv,hd]; pos: int32 scalar (next
+    position, lock-step batch) or int32 [B] (per-row positions — the
+    step-granular decode loop, where each slot sits at its own depth).
     Returns (y [B,1,d], k_cache', v_cache').
     """
     B = x_t.shape[0]
@@ -91,10 +93,15 @@ def attention_decode(cfg, p: dict, x_t: jax.Array, k_cache: jax.Array,
         k_t, v_t = _proj_kv(cfg, p, x_t)                              # [B,1,nkv,hd]
         if cfg.rope != "none":
             k_t = positional(cfg, k_t, ppos)
-        k_cache = jax.lax.dynamic_update_slice(k_cache, k_t.astype(k_cache.dtype),
-                                               (0, pos, 0, 0))
-        v_cache = jax.lax.dynamic_update_slice(v_cache, v_t.astype(v_cache.dtype),
-                                               (0, pos, 0, 0))
+        if jnp.ndim(pos) == 0:
+            k_cache = jax.lax.dynamic_update_slice(
+                k_cache, k_t.astype(k_cache.dtype), (0, pos, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                v_cache, v_t.astype(v_cache.dtype), (0, pos, 0, 0))
+        else:
+            rows = jnp.arange(B)
+            k_cache = k_cache.at[rows, pos].set(k_t[:, 0].astype(k_cache.dtype))
+            v_cache = v_cache.at[rows, pos].set(v_t[:, 0].astype(v_cache.dtype))
         length = pos + 1
     else:
         length = k_cache.shape[1]
@@ -112,8 +119,43 @@ def attention_decode(cfg, p: dict, x_t: jax.Array, k_cache: jax.Array,
     return _out(cfg, p, o[:, None]), k_cache, v_cache
 
 
+def attention_decode_paged(cfg, p: dict, x_t: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, page_table: jax.Array,
+                           pos: jax.Array):
+    """One-token attention against a paged KV cache (continuous batching).
+
+    x_t: [B,1,d]; k_pages/v_pages: [P, page_size, nkv, hd] (the shared pool);
+    page_table: [B, max_pages] s32; pos: [B] s32 per-row positions. Writes
+    each row's new K/V into its chain's page at ``pos`` (empty slots carry an
+    all-null page table, so their writes land on the reserved null page 0),
+    then attends through the page table. Returns (y [B,1,d], k_pages',
+    v_pages').
+    """
+    B = x_t.shape[0]
+    page_size = k_pages.shape[1]
+    q = _proj_q(cfg, p, x_t)                                          # [B,1,nq,hd]
+    if cfg.rope != "none":
+        ppos = _decode_positions(cfg, B, pos)
+        q = positional(cfg, q, ppos)
+    k_t, v_t = _proj_kv(cfg, p, x_t)                                  # [B,1,nkv,hd]
+    if cfg.rope != "none":
+        k_t = positional(cfg, k_t, ppos)
+    rows = jnp.arange(B)
+    page = page_table[rows, pos // page_size]                         # [B]
+    off = pos % page_size
+    k_pages = k_pages.at[page, off].set(k_t[:, 0].astype(k_pages.dtype))
+    v_pages = v_pages.at[page, off].set(v_t[:, 0].astype(v_pages.dtype))
+    o = ops.paged_decode_attention(q[:, 0], k_pages, v_pages, page_table,
+                                   pos + 1)                           # [B,nq,hd]
+    return _out(cfg, p, o[:, None]), k_pages, v_pages
+
+
 def _decode_positions(cfg, batch: int, pos) -> jax.Array:
-    base = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (batch, 1))
+    base = jnp.asarray(pos, jnp.int32)
+    if base.ndim == 0:
+        base = jnp.broadcast_to(base, (batch, 1))
+    else:
+        base = base.reshape(batch, 1)
     if cfg.rope == "mrope":
         return jnp.broadcast_to(base[None], (3, batch, 1))
     return base

@@ -255,11 +255,17 @@ def embedding_specs(cfg, dtype, max_seq: int):
 
 
 def embed_tokens(cfg, p: dict, tokens: jax.Array, pos_offset: jax.Array | int = 0) -> jax.Array:
+    """pos_offset: scalar, or [B] s32 for step-granular decode batches whose
+    rows sit at different depths (repro.core.decode)."""
     x = jnp.take(p["tok"], tokens, axis=0)
     if "pos" in p:
         S = tokens.shape[1]
-        idx = pos_offset + jnp.arange(S)
-        x = x + jnp.take(p["pos"], idx, axis=0)[None]
+        if jnp.ndim(pos_offset) == 0:
+            idx = pos_offset + jnp.arange(S)
+            x = x + jnp.take(p["pos"], idx, axis=0)[None]
+        else:
+            idx = jnp.asarray(pos_offset)[:, None] + jnp.arange(S)[None]  # [B, S]
+            x = x + jnp.take(p["pos"], idx, axis=0)
     return constrain(x.astype(jnp.dtype(cfg.dtype)), "batch", "seq", "embed")
 
 

@@ -19,7 +19,8 @@ from repro.models.layers import (
     norm_specs,
 )
 from repro.models.transformer import (
-    encoder_forward, make_positions, stack_cache_specs, stack_decode, stack_forward,
+    encoder_forward, make_positions, stack_cache_specs, stack_decode,
+    stack_decode_paged, stack_forward, stack_page_pool_specs,
 )
 
 LM_Z_LOSS = 1e-4
@@ -119,6 +120,32 @@ class Model:
         x, inner = stack_decode(self.cfg, params["stack"], x, cache["inner"], pos)
         logits = self._head(params, x)[:, 0]
         return logits, {"inner": inner, "pos": pos + 1}
+
+    # ------------------------------------------------------------- paged decode
+    def decode_paged(self, params, k_pages, v_pages, page_table, pos,
+                     token: jax.Array):
+        """One continuous-batching step against the shared page pool.
+
+        k_pages/v_pages: [L, P, page_size, nkv, hd]; page_table:
+        [B, max_pages] s32; pos: [B] s32 (per-row current length — the host
+        step loop owns it, mirroring the PagePool's chain state); token:
+        [B, 1] s32. Returns (logits [B, V], k_pages', v_pages'). Rows whose
+        page-table row is all zeros are empty slots: their reads and writes
+        land on the reserved null page and their logits are garbage the step
+        loop discards. Uniform stack only.
+        """
+        x = self._embed(params, {}, token, pos_offset=pos)
+        x, k_pages, v_pages = stack_decode_paged(
+            self.cfg, params["stack"], x, k_pages, v_pages, page_table, pos)
+        logits = self._head(params, x)[:, 0]
+        return logits, k_pages, v_pages
+
+    def page_pool_specs(self, n_pages: int, page_size: int):
+        return stack_page_pool_specs(self.cfg, n_pages, page_size)
+
+    def init_page_pool(self, n_pages: int, page_size: int):
+        return init_tree(self.page_pool_specs(n_pages, page_size),
+                         jax.random.PRNGKey(0))
 
     # ------------------------------------------------------------------- cache
     def cache_specs(self, batch: int, capacity: int):

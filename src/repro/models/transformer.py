@@ -182,6 +182,57 @@ def uniform_decode(cfg, sp, x_t, cache, pos):
     return x_t, new_cache
 
 
+def _attn_block_decode_paged(cfg, p, x_t, k_pg, v_pg, page_table, pos, cf):
+    h = apply_norm(cfg, p["ln1"], x_t)
+    a, k_pg, v_pg = attn.attention_decode_paged(cfg, p["attn"], h, k_pg, v_pg,
+                                                page_table, pos)
+    x_t = x_t + a
+    h2 = apply_norm(cfg, p["ln2"], x_t)
+    if "moe" in p:
+        y, _ = moe_mod.moe_forward(cfg, p["moe"], h2, capacity_factor=cf)
+    else:
+        y = apply_mlp(cfg, p["mlp"], h2)
+    return x_t + y, k_pg, v_pg
+
+
+def uniform_decode_paged(cfg, sp, x_t, k_pages, v_pages, page_table, pos):
+    """Paged decode step for the uniform stack (continuous batching).
+
+    k_pages/v_pages: [Ls, P, page_size, nkv, hd] — one page pool per scanned
+    layer, sharing ONE page table (a logical page spans every layer, so the
+    allocator accounts it once). pos: [B] s32 per-row. Unstacked head layers
+    (Kimi first-k-dense) keep per-request caches and are not supported here.
+    """
+    if "head" in sp:
+        raise ValueError("paged decode does not support unstacked head layers")
+
+    def body(xx, inp):
+        p_l, k_pg, v_pg = inp
+        xx, k2, v2 = _attn_block_decode_paged(cfg, p_l, xx, k_pg, v_pg,
+                                              page_table, pos, EVAL_CF)
+        return xx, (k2, v2)
+
+    x_t, (ks, vs) = rscan(body, x_t, (sp["layers"], k_pages, v_pages))
+    return x_t, ks, vs
+
+
+def uniform_page_pool_specs(cfg, n_pages: int, page_size: int):
+    """Zero-init page-pool specs for the uniform stack: K and V pools shaped
+    [Ls, n_pages, page_size, nkv, hd] (page 0 is the reserved null page)."""
+    m = cfg.moe
+    first_k = m.first_k_dense if m else 0
+    if first_k:
+        raise ValueError("paged decode does not support unstacked head layers")
+    Ls = cfg.n_layers
+    hd, nkv = cfg.resolved_head_dim, cfg.n_kv_heads
+    dt = jnp.dtype(cfg.dtype)
+    axes = ("layers", None, "kv_seq", "kv_heads", "head_dim")
+    return {
+        "k_pages": _zeros_spec((Ls, n_pages, page_size, nkv, hd), dt, axes),
+        "v_pages": _zeros_spec((Ls, n_pages, page_size, nkv, hd), dt, axes),
+    }
+
+
 def uniform_cache_specs(cfg, batch: int, capacity: int):
     m = cfg.moe
     first_k = m.first_k_dense if m else 0
@@ -543,6 +594,20 @@ def stack_decode(cfg, sp, x_t, cache, pos):
     if kind == "xlstm":
         return xlstm_decode(cfg, sp, x_t, cache, pos)
     return encdec_decode(cfg, sp, x_t, cache, pos)
+
+
+def stack_decode_paged(cfg, sp, x_t, k_pages, v_pages, page_table, pos):
+    if family_kind(cfg) != "uniform":
+        raise ValueError(
+            f"paged decode supports the uniform stack only, not {family_kind(cfg)}")
+    return uniform_decode_paged(cfg, sp, x_t, k_pages, v_pages, page_table, pos)
+
+
+def stack_page_pool_specs(cfg, n_pages: int, page_size: int):
+    if family_kind(cfg) != "uniform":
+        raise ValueError(
+            f"paged decode supports the uniform stack only, not {family_kind(cfg)}")
+    return uniform_page_pool_specs(cfg, n_pages, page_size)
 
 
 def stack_cache_specs(cfg, batch: int, capacity: int):

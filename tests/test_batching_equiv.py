@@ -1,0 +1,133 @@
+"""Batching equivalence suite: batched == unbatched, bit for bit.
+
+For every bucket size and for mixed request compositions (distinct, duplicate
+and degenerate prompts in one batch), the coalescing stack must return each
+member EXACTLY what the unbatched program returns for its tokens — including
+when the whole batch is retried after a transient host failure. Any drift
+here means padding rows, member ordering, or the retry path leaked into the
+math.
+"""
+import numpy as np
+import pytest
+
+from repro.core.batching import CoalescedBatch, BatchingConfig
+from repro.core.cluster import HostFailure
+from repro.core.metrics import now
+
+
+@pytest.fixture(scope="module")
+def egw():
+    from repro.core import FunctionSpec, Gateway
+    gw = Gateway(n_hosts=2, slots_per_host=2, mode="cold", hedging=False,
+                 batching=BatchingConfig(min_window_s=0.02))
+    spec = FunctionSpec(arch="llama3.2-3b", batch_size=2, prompt_len=16,
+                        decode_steps=2)
+    gw.deploy(spec)
+    yield gw, spec
+    gw.shutdown()
+
+
+def _unbatched(gw, dep, tokens, label="equiv:ref"):
+    return np.asarray(gw.dispatcher.submit(dep, tokens, "unikernel",
+                                           label=label).result(300))
+
+
+def _make_batch(spec, toks, bucket):
+    stacked = np.concatenate(toks, axis=0)
+    padded_rows = bucket * spec.batch_size
+    padded = np.concatenate(
+        [stacked, np.zeros((padded_rows - stacked.shape[0], stacked.shape[1]),
+                           stacked.dtype)], axis=0)
+    t0 = now()
+    return CoalescedBatch(tokens=padded, n_requests=len(toks), bucket=bucket,
+                          rows_per_request=spec.batch_size,
+                          enqueue_times=[t0] * len(toks),
+                          labels=[None] * len(toks))
+
+
+# composition size -> bucket it rounds to; covers every bucket exactly, both
+# full (1, 2, 4, 8) and padded (3 -> 4, 5 -> 8)
+COMPOSITIONS = [(1, 1), (2, 2), (3, 4), (4, 4), (5, 8), (8, 8)]
+
+
+@pytest.mark.parametrize("n,bucket", COMPOSITIONS,
+                         ids=[f"n{n}b{b}" for n, b in COMPOSITIONS])
+def test_every_bucket_bit_identical_to_per_request(egw, n, bucket):
+    gw, spec = egw
+    dep = gw.deployments[spec.name]
+    toks = [dep.example_tokens(seed=1000 + 10 * bucket + i) for i in range(n)]
+    dep.ensure_bucket(bucket * spec.batch_size)
+    batch = _make_batch(spec, toks, bucket)
+    out = np.asarray(gw.dispatcher.submit_batch(
+        dep, batch, "unikernel", label=f"equiv:b{bucket}").result(300))
+    assert out.shape[0] == batch.valid_rows
+    for i, t in enumerate(toks):
+        np.testing.assert_array_equal(out[batch.rows_of(i)],
+                                      _unbatched(gw, dep, t))
+
+
+def test_mixed_composition_duplicates_and_degenerate(egw):
+    """One batch mixing distinct, duplicated and all-zero prompts: duplicates
+    must come back identical to each other AND to their solo run — member
+    results depend only on the member's tokens, never on batch neighbours."""
+    gw, spec = egw
+    dep = gw.deployments[spec.name]
+    a = dep.example_tokens(seed=2000)
+    b = dep.example_tokens(seed=2001)
+    z = np.zeros_like(a)
+    toks = [a, b, a, z, z]                            # 5 members -> bucket 8
+    dep.ensure_bucket(8 * spec.batch_size)
+    batch = _make_batch(spec, toks, 8)
+    out = np.asarray(gw.dispatcher.submit_batch(
+        dep, batch, "unikernel", label="equiv:mixed").result(300))
+    member = [out[batch.rows_of(i)] for i in range(len(toks))]
+    np.testing.assert_array_equal(member[0], member[2])   # duplicate prompts
+    np.testing.assert_array_equal(member[3], member[4])   # zero is a value too
+    for t, got in zip((a, b, z), (member[0], member[1], member[3])):
+        np.testing.assert_array_equal(got, _unbatched(gw, dep, t))
+
+
+def test_coalescer_path_matches_per_request(egw):
+    """The same guarantee through the full serve path (window, bucket
+    rounding, fan-out) rather than a hand-built batch."""
+    gw, spec = egw
+    dep = gw.deployments[spec.name]
+    for burst, seed in ((3, 3000), (6, 3100)):
+        toks = [dep.example_tokens(seed=seed + i) for i in range(burst)]
+        outs = gw.invoke_many(spec.name, toks, label=f"equiv:co{burst}")
+        for out, t in zip(outs, toks):
+            np.testing.assert_array_equal(np.asarray(out),
+                                          _unbatched(gw, dep, t))
+
+
+def test_whole_batch_retry_is_bit_exact(egw):
+    """Inject one transient failure into the REAL batch agent: the whole batch
+    re-dispatches as a unit and every member still gets the exact unbatched
+    result — the retry path changes placement, never the numbers."""
+    gw, spec = egw
+    dep = gw.deployments[spec.name]
+    agent = gw.dispatcher.agent
+    state = {"calls": 0}
+    real = agent.handle_batch
+
+    def flaky(*args, **kwargs):
+        state["calls"] += 1
+        if state["calls"] == 1:
+            tl = kwargs.get("tl", args[4] if len(args) > 4 else None)
+            if tl is not None:
+                tl.t_dispatch = tl.t_dispatch or now()
+            raise HostFailure("injected batch failure")
+        return real(*args, **kwargs)
+
+    retries0 = gw.dispatcher.retries
+    agent.handle_batch = flaky
+    try:
+        toks = [dep.example_tokens(seed=4000 + i) for i in range(3)]
+        outs = gw.invoke_many(spec.name, toks, label="equiv:retry")
+    finally:
+        agent.handle_batch = real
+    assert state["calls"] >= 2                        # failed once, then served
+    assert gw.dispatcher.retries > retries0
+    for out, t in zip(outs, toks):
+        np.testing.assert_array_equal(np.asarray(out),
+                                      _unbatched(gw, dep, t))

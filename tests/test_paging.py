@@ -1,0 +1,138 @@
+"""Property tests for the paged-KV allocator (repro.core.paging).
+
+Hypothesis-driven (real package or the deterministic stub): random
+join/leave/grow/fork interleavings must never leak a page, never alias a page
+across live unrelated chains, and exhaustion must admit-or-queue
+deterministically — a failed reservation leaves the pool byte-for-byte
+unchanged, never a half-built or corrupted chain.
+"""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.paging import NULL_PAGE, PageChain, PagePool
+
+
+def _check_invariants(pool: PagePool, live):
+    """The allocator's global invariants, checked after every mutation."""
+    # conservation: every non-null page is either free or refcounted, never both
+    assert pool.free_pages + pool.used_pages == pool.n_pages - 1
+    # the null page is never handed out
+    for chain in live:
+        assert NULL_PAGE not in chain.pages
+    # no aliasing: a page's refcount equals the number of live chains holding
+    # it — no page is simultaneously free and owned, or owned by a chain that
+    # never forked from its co-owner
+    holders = {}
+    for chain in live:
+        for p in chain.pages:
+            holders[p] = holders.get(p, 0) + 1
+    for p, n in holders.items():
+        assert pool.refcount(p) == n, (p, n, pool.refcount(p))
+    assert pool.used_pages == len(holders)
+
+
+@settings(max_examples=60)
+@given(st.integers(4, 40), st.integers(1, 8),
+       st.lists(st.integers(0, 10_000), min_size=1, max_size=80))
+def test_random_join_leave_grow_never_leaks_or_aliases(n_pages, page_size, ops):
+    pool = PagePool(n_pages, page_size)
+    live = []
+    for op in ops:
+        kind = op % 4
+        if kind == 0:                          # join: reserve a random worst case
+            n_tokens = 1 + (op // 4) % (page_size * (n_pages - 1) + 3)
+            chain = pool.alloc_chain(n_tokens)
+            if chain is not None:
+                assert chain.capacity >= n_tokens
+                live.append(chain)
+        elif kind == 1 and live:               # leave: release a random chain
+            chain = live.pop((op // 4) % len(live))
+            pool.release(chain)
+            assert pool.release(chain) == 0    # double-release is a no-op
+        elif kind == 2 and live:               # grow a random resident chain
+            chain = live[(op // 4) % len(live)]
+            before = list(chain.pages)
+            ok = pool.extend(chain, chain.capacity + 1 + (op // 4) % page_size)
+            if not ok:                         # all-or-nothing on exhaustion
+                assert chain.pages == before
+        elif kind == 3 and live:               # fork: share a prefix
+            live.append(pool.fork(live[(op // 4) % len(live)]))
+        _check_invariants(pool, live)
+    for chain in live:
+        pool.release(chain)
+    assert pool.free_pages == pool.n_pages - 1
+    assert pool.used_pages == 0
+
+
+@settings(max_examples=40)
+@given(st.integers(4, 24), st.integers(1, 8), st.integers(1, 2000))
+def test_exhaustion_is_deterministic_and_corruption_free(n_pages, page_size,
+                                                         n_tokens):
+    """Admit-or-queue: when the pool can't cover a request, the answer is None
+    and NOTHING changed — asking again with an unchanged pool gives the same
+    answer, and resident chains keep their exact pages."""
+    pool = PagePool(n_pages, page_size)
+    resident = pool.alloc_chain(page_size)                 # one live chain
+    assert resident is not None
+    resident_pages = list(resident.pages)
+    huge = (pool.n_pages + n_tokens) * page_size           # can never fit
+    before = pool.stats()
+    for _ in range(3):                                     # deterministic: same
+        assert pool.alloc_chain(huge) is None              # answer every time
+    after = pool.stats()
+    before["alloc_failures"] = after["alloc_failures"]     # the only delta
+    assert after == before
+    assert resident.pages == resident_pages                # chain untouched
+    _check_invariants(pool, [resident])
+    # the pool still admits what does fit
+    fit = pool.alloc_chain(page_size)
+    assert fit is not None
+    assert set(fit.pages).isdisjoint(resident_pages)
+
+
+def test_fork_shares_pages_until_last_release():
+    pool = PagePool(8, 4)
+    a = pool.alloc_chain(10)                               # 3 pages
+    b = pool.fork(a)
+    assert b.pages == a.pages and b.pages is not a.pages
+    for p in a.pages:
+        assert pool.refcount(p) == 2
+    assert pool.release(a) == 0                            # b still holds them
+    assert pool.used_pages == 3
+    assert pool.release(b) == 3                            # last referent frees
+    assert pool.free_pages == 7
+
+
+def test_extend_within_reservation_is_free():
+    pool = PagePool(8, 4)
+    chain = pool.alloc_chain(10)                           # capacity 12
+    used = pool.used_pages
+    assert pool.extend(chain, 12) is True
+    assert pool.used_pages == used                         # no new pages
+    assert pool.extend(chain, 13) is True                  # one page past
+    assert pool.used_pages == used + 1
+
+
+def test_released_chain_rejects_extend_and_fork():
+    pool = PagePool(8, 4)
+    chain = pool.alloc_chain(4)
+    pool.release(chain)
+    with pytest.raises(ValueError):
+        pool.extend(chain, 8)
+    with pytest.raises(ValueError):
+        pool.fork(chain)
+
+
+def test_table_row_pads_with_null_page():
+    chain = PageChain([3, 1, 4], page_size=4)
+    row = chain.table_row(6)
+    assert row.tolist() == [3, 1, 4, NULL_PAGE, NULL_PAGE, NULL_PAGE]
+    assert row.dtype.name == "int32"
+
+
+def test_pool_rejects_degenerate_geometry():
+    with pytest.raises(ValueError):
+        PagePool(1, 4)                                     # only the null page
+    with pytest.raises(ValueError):
+        PagePool(4, 0)
