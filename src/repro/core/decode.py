@@ -109,6 +109,7 @@ class DecodeScheduler:
         self._lock = threading.Lock()
         self._wake = threading.Condition(self._lock)
         self._queue: List[_Request] = []
+        self._inflight = 0             # popped from _queue, not yet settled/slotted
         self._running = True
         self._idle_since = self._now()
         # counters
@@ -136,8 +137,17 @@ class DecodeScheduler:
                 f"decode prompt must be [1, {self.dep.spec.prompt_len}], "
                 f"got {tokens.shape}"))
             return fut
-        budget = min(int(max_new or self.default_max_new),
-                     self.default_max_new)
+        if max_new is None:
+            budget = self.default_max_new
+        else:
+            budget = int(max_new)
+            if not 1 <= budget <= self.default_max_new:
+                # admit always produces one token, so 0 cannot be honored;
+                # silently clamping an over-budget ask would truncate output
+                fut.set_exception(ValueError(
+                    f"max_new must be in [1, {self.default_max_new}] "
+                    f"(the deployment's decode budget), got {budget}"))
+                return fut
         worst = self.pool.pages_for(tokens.shape[1] + budget)
         if worst > min(self.bundle.n_pages - 1, self.bundle.max_pages):
             fut.set_exception(ValueError(
@@ -161,7 +171,7 @@ class DecodeScheduler:
         """Block until every submitted request has settled."""
         deadline = self._now() + timeout_s
         with self._wake:
-            while self._queue or any(self._slots):
+            while self._queue or self._inflight or any(self._slots):
                 if not self._wake.wait(timeout=0.1):
                     pass
                 if self._now() > deadline:
@@ -214,7 +224,10 @@ class DecodeScheduler:
                 self._admit_ready()
                 self._step_once()
             except Exception as e:          # noqa: BLE001 — settle, never die
-                self._fail_all(e)
+                try:
+                    self._fail_all(e)
+                except Exception:           # noqa: BLE001
+                    pass                    # the loop thread must survive
             with self._wake:
                 if not (self._queue or any(self._slots)):
                     self._idle_since = self._now()
@@ -229,14 +242,20 @@ class DecodeScheduler:
         for slot, a in enumerate(self._slots):
             if a is not None:
                 self._slots[slot] = None
-                self.pool.release(a.chain)
+                try:
+                    self.pool.release(a.chain)
+                except Exception:           # noqa: BLE001
+                    pass                    # settling the future comes first
                 if not a.req.future.done():
                     a.req.future.set_exception(err)
         for req in pending:
             if not req.future.done():
                 req.future.set_exception(err)
         if self._ex is not None:
-            self._cool()
+            try:
+                self._cool()
+            except Exception:               # noqa: BLE001
+                pass                        # _cool detached _ex before exit()
 
     # -------------------------------------------------------------- lifecycle
     def _ensure_booted(self, tl: Timeline) -> None:
@@ -246,11 +265,19 @@ class DecodeScheduler:
         driver = host.drivers[self.cfg.driver]
         tl.t_start_begin = self._now()
         ex = driver.start(self.dep, tl)
-        gates = getattr(ex, "gates", None)
-        if gates is not None:
-            gates.bind_timeline(tl)
-        pools = self.dep.model.init_page_pool(self.bundle.n_pages,
-                                              self.bundle.page_size)
+        try:
+            gates = getattr(ex, "gates", None)
+            if gates is not None:
+                gates.bind_timeline(tl)
+            pools = self.dep.model.init_page_pool(self.bundle.n_pages,
+                                                  self.bundle.page_size)
+        except Exception:
+            # the started executor was never published to self._ex: exit it
+            # here (with residency accounting) or it leaks forever
+            ex.exit()
+            if self.on_exit is not None:
+                self.on_exit(ex)
+            raise
         self._k_pages, self._v_pages = pools["k_pages"], pools["v_pages"]
         self._ex, self._host = ex, host
         self.boots += 1
@@ -289,9 +316,19 @@ class DecodeScheduler:
             if chain is None:
                 self.admit_waits += 1
                 return
+            # pop + in-flight mark is one atomic transition: the request is
+            # always visible to drain() — in _queue, counted in _inflight, or
+            # in a slot — so close() can never cool the executor mid-admit
+            # and every future still settles exactly once
             with self._wake:
                 self._queue.pop(0)
-            self._admit(free[0], req, chain)
+                self._inflight += 1
+            try:
+                self._admit(free[0], req, chain)
+            finally:
+                with self._wake:
+                    self._inflight -= 1
+                    self._wake.notify_all()
 
     def _admit(self, slot: int, req: _Request, chain: PageChain) -> None:
         tl = req.timeline

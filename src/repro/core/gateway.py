@@ -155,6 +155,12 @@ class Gateway:
         with self._lock:
             self.deployments[spec.name] = dep
         if self.decode_cfg is not None:
+            old = self.decoders.get(spec.name)
+            if old is not None:
+                # re-deploy of the same name: drain + cool the old scheduler
+                # first, or its loop thread and any booted executor leak with
+                # residency never accounted
+                old.close()
             # decode bundle (admit + step) is a deploy-time artifact exactly
             # like the bucket images: compiled here, never on a request
             self.decoders[spec.name] = DecodeScheduler(

@@ -6,6 +6,7 @@ cool-to-zero with residency accounting, EOS/deadline retirement, and the
 error path that settles every future without killing the loop.
 """
 import dataclasses
+import threading
 import time
 
 import numpy as np
@@ -206,6 +207,109 @@ def test_step_failure_settles_futures_and_loop_survives(dgw):
     finally:
         sched.close()
     assert out.tolist() == _dense_greedy(dep, dep.example_tokens(seed=7)[:1], 4)
+
+
+def test_close_during_inflight_admit_settles_the_future(dgw):
+    """A request mid-admit is in neither ``_queue`` nor ``_slots`` — drain()
+    (and so close()) must still see it via the in-flight count and wait, or
+    close() cools the executor under the prefill and the future never
+    settles."""
+    gw, spec = dgw
+    dep = gw.deployments[spec.name]
+    sched = DecodeScheduler(dep, gw.cluster, gw.recorder,
+                            DecodeConfig(slots=2, page_size=8,
+                                         cool_after_s=0.1))
+    real = sched.bundle
+    started = threading.Event()
+
+    def slow_admit(*a, **k):
+        started.set()
+        time.sleep(0.3)                   # hold the request in the admit gap
+        return real.admit(*a, **k)
+
+    sched.bundle = dataclasses.replace(real, admit=slow_admit)
+    # budget > 1 extra step so retirement spans several loop iterations —
+    # close() must wait through the admit AND the remaining steps
+    fut = sched.submit(dep.example_tokens(seed=3)[:1], max_new=6)
+    assert started.wait(60)
+    sched.close()                         # races the in-flight admit
+    out = fut.result(1)                   # settled BEFORE close() returned
+    assert out.tolist() == _dense_greedy(dep, dep.example_tokens(seed=3)[:1], 6)
+    assert sched.pool.used_pages == 0
+    assert sched._ex is None
+
+
+def test_submit_rejects_out_of_range_max_new(dgw):
+    """max_new is validated, never clamped: over-budget asks fail loudly
+    instead of returning silently truncated output, and 0 (admit always emits
+    one token) is an error, not the full default budget."""
+    gw, spec = dgw
+    dec = gw.decoders[spec.name]
+    for bad in (0, -1, spec.decode_steps + 1):
+        with pytest.raises(ValueError, match="max_new must be in"):
+            dec.submit(gw.deployments[spec.name].example_tokens()[:1],
+                       max_new=bad).result(1)
+    # None still means the full deploy budget
+    out = gw.invoke_decode(spec.name)
+    assert out.shape == (spec.decode_steps,)
+
+
+def test_redeploy_closes_the_old_decoder():
+    """Re-deploying a name must drain + cool the old scheduler, not leak its
+    loop thread and executor outside the residency accounting."""
+    gw = Gateway(n_hosts=1, slots_per_host=2, mode="cold", hedging=False,
+                 decode=DecodeConfig(slots=2, page_size=8, cool_after_s=0.1))
+    try:
+        spec = FunctionSpec(arch="llama3.2-3b", batch_size=1, prompt_len=8,
+                            decode_steps=4)
+        gw.deploy(spec)
+        old = gw.decoders[spec.name]
+        gw.invoke_decode(spec.name, max_new=2)
+        gw.deploy(spec)
+        new = gw.decoders[spec.name]
+        assert new is not old
+        assert not old._running
+        assert old._ex is None
+        assert not old._thread.is_alive()
+        assert gw.invoke_decode(spec.name, max_new=2).shape == (2,)
+    finally:
+        gw.shutdown()
+
+
+def test_boot_failure_after_start_exits_the_executor(dgw, monkeypatch):
+    """If post-start setup (page-pool init) fails, the started executor must
+    be exited with its residency accounted — not silently leaked off
+    ``self._ex``."""
+    gw, spec = dgw
+    dep = gw.deployments[spec.name]
+    exited = []
+    sched = DecodeScheduler(dep, gw.cluster, gw.recorder,
+                            DecodeConfig(slots=2, page_size=8,
+                                         cool_after_s=0.1),
+                            on_exit=exited.append)
+    real_init = type(dep.model).init_page_pool
+    fail = {"on": True}
+
+    def flaky_init(self, *a, **k):
+        if fail["on"]:
+            raise RuntimeError("injected pool-init failure")
+        return real_init(self, *a, **k)
+
+    monkeypatch.setattr(type(dep.model), "init_page_pool", flaky_init)
+    try:
+        fut = sched.submit(dep.example_tokens(seed=5)[:1], max_new=2)
+        with pytest.raises(RuntimeError, match="injected pool-init"):
+            fut.result(300)
+        assert len(exited) == 1               # started executor was exited...
+        assert sched._ex is None              # ...and never published
+        assert sched.pool.used_pages == 0
+        fail["on"] = False
+        # the loop survived the failed boot AND the per-request error path
+        out = sched.submit(dep.example_tokens(seed=5)[:1], max_new=2).result(300)
+        assert out.tolist() == _dense_greedy(
+            dep, dep.example_tokens(seed=5)[:1], 2)
+    finally:
+        sched.close()
 
 
 def test_decode_bundle_is_a_deploy_time_artifact(dgw):
